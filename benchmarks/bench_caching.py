@@ -1,0 +1,124 @@
+"""Paper Table I + Fig. 3 + Fig. 8 + Fig. 13 + Fig. 15: locality study and
+caching-policy comparisons."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BenchContext, geomean
+from repro.core.cache_sim import make_cache, simulate
+from repro.core.recmg import precompute_outputs, run_recmg
+from repro.core.trace import reuse_distance_cdf
+
+
+def table1_overhead(ctx: BenchContext):
+    """Embedding-access overhead vs caching ratio (modeled slow-tier time as
+    a fraction of total batch time, per the paper's Table I structure)."""
+    tr = ctx.trace(0)
+    keys = tr.global_id
+    compute_us_per_access = 0.5  # device compute per access (measured scale)
+    for ratio in (1.0, 0.2, 0.07):
+        cap = max(16, int(ratio * tr.unique_count()))
+        res = simulate(keys[:50_000], make_cache("lru_fa", cap))
+        fetch_us = res.on_demand * 10.0
+        total_us = len(keys[:50_000]) * compute_us_per_access + fetch_us
+        ctx.emit("table1", f"caching_ratio_{ratio:g}",
+                 round(fetch_us / total_us, 4),
+                 f"emb_access_overhead_frac(hit={res.hit_rate:.3f})")
+
+
+def fig3_reuse_distance(ctx: BenchContext):
+    tr = ctx.trace(0)
+    edges, frac = reuse_distance_cdf(tr.global_id[:100_000], 17)
+    for p in (8, 10, 12, 14, 16):
+        ctx.emit("fig3", f"frac_rd_ge_2^{p}", round(float(frac[p]), 4),
+                 "scaled analogue of paper's 20% >= 2^20")
+
+
+def fig8_cache_hits(ctx: BenchContext):
+    """Cache hits: LRU/LFU vs the caching model vs optgen, five datasets."""
+    for ds in range(ctx.cfg.n_datasets):
+        tr = ctx.trace(ds)
+        keys = tr.global_id
+        cap = ctx.capacity(ds)
+        labels, opt_hits, _ = ctx.labels(ds)
+        base = {}
+        for name in ("lru_fa", "lru_32w", "lfu_32w"):
+            base[name] = simulate(keys, make_cache(name, cap)).hits
+        cparams, mcfg, acc = ctx.caching_model(ds)
+        outputs = ctx.outputs(ds, use_prefetch=False)
+        cm = run_recmg(tr, cap, outputs, use_prefetch=False)
+        ctx.emit("fig8", f"ds{ds}_caching_model_acc", round(float(acc), 4),
+                 "paper: ~83%")
+        best_base = max(base.values())
+        for name, h in base.items():
+            ctx.emit("fig8", f"ds{ds}_{name}_hits", int(h))
+        ctx.emit("fig8", f"ds{ds}_caching_model_hits", int(cm.hits),
+                 f"vs best LRU/LFU: {cm.hits / max(best_base,1):.2f}x")
+        ctx.emit("fig8", f"ds{ds}_optgen_hits", int(opt_hits.sum()),
+                 f"OPT/LRU = {opt_hits.sum() / max(base['lru_fa'],1):.2f}x")
+
+
+def fig13_buffer_size(ctx: BenchContext):
+    """Hit rate vs buffer size: LRU, CM-only, RecMG, optgen."""
+    ds = 0
+    tr = ctx.trace(ds)
+    keys = tr.global_id
+    from repro.core.belady import belady_sim
+
+    for frac in (0.01, 0.05, 0.10, 0.15, 0.30):
+        cap = ctx.capacity(ds, frac)
+        lru = simulate(keys, make_cache("lru_fa", cap))
+        opt_hits, _ = belady_sim(keys, cap)
+        outputs = ctx.outputs(ds, use_prefetch=True)
+        cm = run_recmg(tr, cap, outputs, use_prefetch=False)
+        full = run_recmg(tr, cap, outputs, use_prefetch=True)
+        ctx.emit("fig13", f"cap{int(frac*100)}pct_lru",
+                 round(lru.hit_rate, 4))
+        ctx.emit("fig13", f"cap{int(frac*100)}pct_cm",
+                 round(cm.hit_rate, 4))
+        ctx.emit("fig13", f"cap{int(frac*100)}pct_recmg",
+                 round(full.hit_rate, 4))
+        ctx.emit("fig13", f"cap{int(frac*100)}pct_optgen",
+                 round(float(opt_hits.mean()), 4))
+
+
+def fig15_advanced_policies(ctx: BenchContext):
+    """Advanced replacement (SRRIP/DRRIP/Hawkeye) + prefetchers (BOP) vs the
+    caching model, geomean across 3 datasets and buffer sizes."""
+    from repro.core.prefetchers import make_prefetcher
+
+    sizes = (0.01, 0.05, 0.10, 0.15)
+    n_ds = min(3, ctx.cfg.n_datasets)
+    results = {}
+    for frac in sizes:
+        per_policy = {}
+        for ds in range(n_ds):
+            tr = ctx.trace(ds)
+            keys = tr.global_id
+            cap = ctx.capacity(ds, frac)
+            for name in ("lru_32w", "srrip", "drrip", "hawkeye", "mockingjay"):
+                per_policy.setdefault(name, []).append(
+                    simulate(keys, make_cache(name, cap)).hit_rate)
+            per_policy.setdefault("bop+lru", []).append(
+                simulate(keys, make_cache("lru_32w", cap),
+                         make_prefetcher("bop")).hit_rate)
+            outputs = ctx.outputs(ds, use_prefetch=True)
+            cm = run_recmg(tr, cap, outputs, use_prefetch=False)
+            per_policy.setdefault("caching_model", []).append(cm.hit_rate)
+            full = run_recmg(tr, cap, outputs, use_prefetch=True)
+            per_policy.setdefault("recmg", []).append(full.hit_rate)
+        for name, vals in per_policy.items():
+            results.setdefault(name, []).append(geomean(vals))
+            ctx.emit("fig15", f"cap{int(frac*100)}pct_{name}",
+                     round(geomean(vals), 4))
+    for name, vals in results.items():
+        ctx.emit("fig15", f"geomean_{name}", round(geomean(vals), 4),
+                 "across buffer sizes")
+
+
+def run(ctx: BenchContext):
+    table1_overhead(ctx)
+    fig3_reuse_distance(ctx)
+    fig8_cache_hits(ctx)
+    fig13_buffer_size(ctx)
+    fig15_advanced_policies(ctx)

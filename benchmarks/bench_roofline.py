@@ -1,0 +1,76 @@
+"""Roofline summary from the dry-run artifacts + kernel micro-bench.
+
+The roofline table itself is produced by ``repro.launch.roofline`` from the
+compiled dry-run; this bench re-emits the headline numbers into the CSV
+stream and micro-times the XLA reference paths of the Pallas kernels (the
+kernels run only on TPU; interpret-mode timing is meaningless)."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchContext
+
+
+def roofline_summary(ctx: BenchContext, tag: str = "baseline"):
+    from repro.launch.roofline import load_rows
+
+    d = Path("runs/dryrun") / tag
+    if not d.exists():
+        ctx.emit("roofline", "missing", 0,
+                 f"run `python -m repro.launch.dryrun --all` first ({d})")
+        return
+    rows = load_rows(d, "16x16")
+    if not rows:
+        return
+    for r in sorted(rows, key=lambda r: -r["roofline_fraction"])[:5]:
+        ctx.emit("roofline", f"best_{r['arch']}__{r['shape']}",
+                 round(r["roofline_fraction"], 4),
+                 f"dominant={r['dominant']}")
+    fracs = [r["roofline_fraction"] for r in rows]
+    ctx.emit("roofline", "cells", len(rows))
+    ctx.emit("roofline", "median_fraction", round(float(np.median(fracs)), 4))
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    for k, v in dom.items():
+        ctx.emit("roofline", f"bound_by_{k}", v)
+
+
+def _time_us(fn, *args, iters=20):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_microbench(ctx: BenchContext):
+    from repro.kernels import ops
+
+    table = jax.random.normal(jax.random.PRNGKey(0), (20_000, 128))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (512, 20), 0, 20_000)
+    us = _time_us(lambda: ops.gather_pool(table, idx))
+    ctx.emit("kernels", "gather_pool_512x20_us", round(us, 1),
+             "XLA ref path (Pallas path is TPU-only)")
+
+    po = jax.random.normal(jax.random.PRNGKey(0), (4096, 5, 25))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4096, 15, 25))
+    us = _time_us(lambda: ops.chamfer(po, w))
+    ctx.emit("kernels", "chamfer_4096_us", round(us, 1))
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (8, 512, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (8, 512, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (8, 512, 64))
+    us = _time_us(lambda: ops.flash_attention(q, k, v))
+    ctx.emit("kernels", "attention_8x512_us", round(us, 1))
+
+
+def run(ctx: BenchContext):
+    roofline_summary(ctx)
+    kernel_microbench(ctx)

@@ -1,0 +1,138 @@
+"""Shared benchmark context: datasets, Belady labels, trained RecMG models.
+
+Scaled-down analogue of the paper's setup (five Meta production datasets,
+856 tables, 62M vectors, 400M+ accesses) sized for this 1-core container:
+five synthetic datasets (seeds 0-4) from the calibrated generator, 24
+tables, configurable accesses.  Every resource is built lazily and cached
+in-process so figures share work.  ``--quick`` shrinks traces/epochs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.belady import belady_labels
+from repro.core.caching_model import (CachingModelConfig,
+                                      evaluate_caching_model,
+                                      train_caching_model)
+from repro.core.features import make_windows, split_train_eval
+from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
+                                       make_prefetch_data,
+                                       train_prefetch_model)
+from repro.core.trace import Trace, TraceGenConfig, generate_trace
+
+
+@dataclass
+class BenchConfig:
+    n_datasets: int = 5
+    n_tables: int = 24
+    rows_per_table: int = 20_000
+    n_accesses: int = 200_000
+    cap_frac: float = 0.2
+    epochs: int = 6
+    batch_size: int = 512
+    lr: float = 5e-3
+    quick: bool = False
+
+    def __post_init__(self):
+        if self.quick:
+            self.n_accesses = 60_000
+            self.epochs = 2
+            self.n_datasets = 3
+
+
+class BenchContext:
+    def __init__(self, cfg: Optional[BenchConfig] = None):
+        self.cfg = cfg or BenchConfig()
+        self._traces: Dict[int, Trace] = {}
+        self._labels: Dict[Tuple[int, int], np.ndarray] = {}
+        self._caching: Dict[int, tuple] = {}
+        self._prefetch: Dict[int, tuple] = {}
+        self._outputs: Dict[tuple, object] = {}
+        self.rows: List[dict] = []
+
+    # ---------------- resources ----------------
+    def trace(self, ds: int) -> Trace:
+        if ds not in self._traces:
+            self._traces[ds] = generate_trace(TraceGenConfig(
+                n_tables=self.cfg.n_tables,
+                rows_per_table=self.cfg.rows_per_table,
+                n_accesses=self.cfg.n_accesses,
+                seed=ds, drift_every=10**9,
+            ))
+        return self._traces[ds]
+
+    def capacity(self, ds: int, frac: Optional[float] = None) -> int:
+        frac = frac if frac is not None else self.cfg.cap_frac
+        return max(16, int(frac * self.trace(ds).unique_count()))
+
+    def labels(self, ds: int, cap: Optional[int] = None):
+        cap = cap or self.capacity(ds)
+        key = (ds, cap)
+        if key not in self._labels:
+            self._labels[key] = belady_labels(self.trace(ds).global_id, cap)
+        return self._labels[key]
+
+    def caching_model(self, ds: int):
+        """(params, cfg, eval_accuracy) trained on dataset ds."""
+        if ds not in self._caching:
+            tr = self.trace(ds)
+            labels, _, _ = self.labels(ds)
+            mcfg = CachingModelConfig(n_tables=tr.n_tables)
+            data = make_windows(tr, labels=labels)
+            trd, evd = split_train_eval(data)
+            params, _ = train_caching_model(
+                trd, mcfg, epochs=self.cfg.epochs,
+                batch_size=self.cfg.batch_size, lr=self.cfg.lr,
+            )
+            acc = evaluate_caching_model(params, evd)
+            self._caching[ds] = (params, mcfg, acc)
+        return self._caching[ds]
+
+    def prefetch_model(self, ds: int, loss: str = "chamfer",
+                       window: int = 15, backbone: str = "lstm"):
+        key = (ds, loss, window, backbone)
+        if key not in self._prefetch:
+            tr = self.trace(ds)
+            pcfg = PrefetchModelConfig(n_tables=tr.n_tables, loss=loss,
+                                       window=window, backbone=backbone)
+            pdata = make_prefetch_data(tr, window=max(window, 15), stride=10)
+            params, losses = train_prefetch_model(
+                pdata, pcfg, epochs=self.cfg.epochs,
+                batch_size=self.cfg.batch_size, lr=self.cfg.lr,
+            )
+            self._prefetch[key] = (params, pcfg, losses, pdata)
+        return self._prefetch[key]
+
+    def outputs(self, ds: int, use_prefetch: bool = True):
+        from repro.core.recmg import precompute_outputs
+
+        key = (ds, use_prefetch)
+        if key not in self._outputs:
+            cparams, mcfg, _ = self.caching_model(ds)
+            pf = None
+            if use_prefetch:
+                pparams, pcfg, _, _ = self.prefetch_model(ds)
+                pf = (pparams, pcfg)
+            self._outputs[key] = precompute_outputs(
+                self.trace(ds), caching=(cparams, mcfg), prefetch=pf)
+        return self._outputs[key]
+
+    # ---------------- reporting ----------------
+    def emit(self, bench: str, name: str, value, derived: str = ""):
+        row = {"bench": bench, "name": name, "value": value,
+               "derived": derived}
+        self.rows.append(row)
+        if isinstance(value, float):
+            value = round(value, 6)
+        print(f"{bench},{name},{value},{derived}", flush=True)
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([max(x, 1e-12) for x in xs], dtype=np.float64)
+    return float(np.exp(np.log(xs).mean()))

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only caching,...]
+
+Prints ``bench,name,value,derived`` CSV rows and writes
+runs/bench_results.json.  Mapping to the paper:
+
+    bench_caching   -> Table I, Fig 3, Fig 8, Fig 13, Fig 15
+    bench_prefetch  -> Fig 9, Fig 10, Table II, Fig 11, Fig 12, Fig 14,
+                       Table IV
+    bench_e2e       -> Fig 16, Fig 17, Fig 18, Fig 19
+    bench_roofline  -> assignment §Roofline + kernel micro-bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from benchmarks.common import BenchConfig, BenchContext
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: caching,prefetch,e2e,roofline")
+    ap.add_argument("--accesses", type=int, default=0)
+    ap.add_argument("--epochs", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = BenchConfig(quick=args.quick)
+    if args.accesses:
+        cfg.n_accesses = args.accesses
+    if args.epochs:
+        cfg.epochs = args.epochs
+    ctx = BenchContext(cfg)
+    print("bench,name,value,derived")
+
+    mods = {
+        "caching": "benchmarks.bench_caching",
+        "prefetch": "benchmarks.bench_prefetch",
+        "e2e": "benchmarks.bench_e2e",
+        "roofline": "benchmarks.bench_roofline",
+    }
+    only = [s for s in args.only.split(",") if s] or list(mods)
+    import importlib
+
+    for name in only:
+        t0 = time.time()
+        mod = importlib.import_module(mods[name])
+        mod.run(ctx)
+        ctx.emit("meta", f"{name}_wall_s", round(time.time() - t0, 1))
+
+    Path("runs").mkdir(exist_ok=True)
+    Path("runs/bench_results.json").write_text(json.dumps(ctx.rows, indent=2))
+    print(f"# wrote runs/bench_results.json ({len(ctx.rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: train a reduced smollm-135m for a few hundred steps on CPU
+with checkpointing, deterministic data, and straggler monitoring.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 300]
+
+The same launcher drives full-size runs on real pods (see
+src/repro/launch/train.py and the multi-pod dry-run).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+    losses = train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--seq-len", "256", "--batch", "8",
+        "--ckpt", "runs/quickstart", "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+    print(f"\nquickstart: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {len(losses)} steps (resume with the same command)")

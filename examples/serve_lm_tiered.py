@@ -1,0 +1,69 @@
+"""Batched LM serving with the vocab embedding on tiered memory.
+
+The paper's technique applied to an LM (DESIGN.md §4 arch-applicability):
+the token-embedding table lives on the host tier; a small device buffer
+serves decode-time rows, managed by LRU or the RecMG priority buffer.
+
+    PYTHONPATH=src python examples/serve_lm_tiered.py --steps 48
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=48)
+    ap.add_argument("--capacity-frac", type=float, default=0.1)
+    args = ap.parse_args()
+
+    from repro.configs import RunConfig, get_config
+    from repro.core.tiered import TieredEmbeddingStore
+    from repro.models.model_api import build
+    from repro.models.transformer import decode_step_embeds, init_cache
+
+    cfg = get_config(args.arch).reduced()
+    run = RunConfig(attn_block_q=32, attn_block_kv=32)
+    bundle = build(cfg, run)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    # Host tier: the full vocab table.  Fast tier: a small device buffer.
+    host_vocab = np.asarray(params["embed"], np.float32)
+    cap = max(16, int(args.capacity_frac * cfg.vocab))
+    store = TieredEmbeddingStore(host_vocab, cap, policy="lru")
+    print(f"{args.arch}: vocab {cfg.vocab} rows on host tier, "
+          f"{cap}-row device buffer ({args.capacity_frac:.0%})")
+
+    B = args.batch
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab)
+    _, cache = bundle.prefill(params, {"tokens": prompt},
+                              cache_len=8 + args.steps)
+    step = jax.jit(lambda p, x, c: decode_step_embeds(p, cfg, run, x, c))
+
+    tok = prompt[:, -1:]
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        rows = store.lookup(np.asarray(tok[:, 0]))  # fast-tier vocab rows
+        logits, cache = step(params, jnp.asarray(rows)[:, None, :], cache)
+        tok = jnp.argmax(logits, axis=-1)[:, None]  # greedy decode
+    dt = time.perf_counter() - t0
+    st = store.stats
+    print(f"decoded {args.steps} steps x {B} streams in {dt:.2f}s "
+          f"({args.steps * B / dt:.0f} tok/s)")
+    print(f"vocab-buffer hit rate: {st.hit_rate:.1%} "
+          f"(on-demand rows: {st.on_demand_rows})")
+    print("greedy decode concentrates on hot tokens -> the buffer converges "
+          "to the hot vocabulary, exactly the paper's power-law regime.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    DLRM_SHAPES,
+    LM_SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    auto_microbatches,
+    shape_applicable,
+    shapes_for,
+)
+
+# arch-id -> module name (one module per assigned architecture + paper's own)
+_ARCH_MODULES = {
+    "internvl2-26b": "internvl2_26b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "qwen3-14b": "qwen3_14b",
+    "smollm-360m": "smollm_360m",
+    "smollm-135m": "smollm_135m",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "grok-1-314b": "grok1_314b",
+    "whisper-large-v3": "whisper_large_v3",
+    "hymba-1.5b": "hymba_1_5b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "dlrm-recmg": "dlrm_recmg",
+}
+
+ASSIGNED_ARCHS = [a for a in _ARCH_MODULES if a != "dlrm-recmg"]
+ALL_ARCHS = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def list_archs():
+    return list(_ARCH_MODULES)

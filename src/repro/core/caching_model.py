@@ -1,0 +1,167 @@
+"""RecMG caching model (paper §V-A).
+
+One seq2seq LSTM stack + attention, ~37K params.  Input: a chunk of prior
+accesses; output: a *binary* priority per input element (1 = keep in buffer
+with high priority) — the paper's key labeling trick that collapses the
+billion-way placement problem to two labels.  Trained with cross-entropy
+against Belady/optgen keep bits.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import lstm as LS
+from repro.core.features import ROW_BUCKETS, WindowData
+
+
+@dataclass(frozen=True)
+class CachingModelConfig:
+    n_tables: int = 856
+    table_emb: int = 8
+    row_emb: int = 8
+    hidden: int = 40
+    in_len: int = 15
+    n_scalar: int = 3  # normalized id + online log-freq + log-recency
+
+
+def init_caching_model(key, cfg: CachingModelConfig):
+    ks = jax.random.split(key, 8)
+    f = cfg.table_emb + 2 * cfg.row_emb + cfg.n_scalar
+    H = cfg.hidden
+    return {
+        "table_emb": jax.random.normal(ks[0], (cfg.n_tables, cfg.table_emb)) * 0.1,
+        "row_emb1": jax.random.normal(ks[1], (ROW_BUCKETS[0], cfg.row_emb)) * 0.1,
+        "row_emb2": jax.random.normal(ks[2], (ROW_BUCKETS[1], cfg.row_emb)) * 0.1,
+        "enc": LS.lstm_init(ks[3], f, H),
+        "dec": LS.lstm_init(ks[4], 2 * H, H),
+        "attn": LS.attn_init(ks[5], H),
+        "w_out": jax.random.normal(ks[6], (2 * H,)) / math.sqrt(2 * H),
+        "b_out": jnp.zeros(()),
+    }
+
+
+def _featurize(params, xt, xr1, xr2, xn, xf, xrc):
+    """Per-window embeddings.  xt/xr1/xr2: (T,) int; xn/xf/xrc: (T,) f32."""
+    return jnp.concatenate(
+        [
+            params["table_emb"][xt],
+            params["row_emb1"][xr1],
+            params["row_emb2"][xr2],
+            xn[:, None],
+            xf[:, None],
+            xrc[:, None],
+        ],
+        axis=-1,
+    )
+
+
+def caching_logits(params, xt, xr1, xr2, xn, xf, xrc):
+    """One window -> per-element keep logits (T,)."""
+    feats = _featurize(params, xt, xr1, xr2, xn, xf, xrc)  # (T, f)
+    enc_hs, (hT, cT) = LS.lstm_seq(params["enc"], feats)
+
+    def dec_step(carry, enc_h):
+        (h, c) = carry
+        ctx = LS.attend(params["attn"], h, enc_hs)
+        (h, c), _ = LS.lstm_step(params["dec"], (h, c), jnp.concatenate([enc_h, ctx]))
+        logit = jnp.concatenate([h, ctx]) @ params["w_out"] + params["b_out"]
+        return (h, c), logit
+
+    _, logits = lax.scan(dec_step, (hT, cT), enc_hs)
+    return logits
+
+
+caching_logits_batch = jax.vmap(caching_logits, in_axes=(None, 0, 0, 0, 0, 0, 0))
+
+
+def bce_loss(params, batch: Dict[str, jnp.ndarray]):
+    logits = caching_logits_batch(
+        params, batch["xt"], batch["xr1"], batch["xr2"], batch["xn"],
+        batch["xf"], batch["xrc"]
+    )
+    y = batch["y"]
+    # Stable sigmoid BCE (the paper's cross-entropy over {keep, evict}).
+    loss = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return loss.mean()
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _train_step(params, opt, batch, opt_cfg):
+    from repro.optim.adamw import apply_updates
+
+    loss, grads = jax.value_and_grad(bce_loss)(params, batch)
+    params, opt, _ = apply_updates(opt_cfg, params, opt, grads)
+    return params, opt, loss
+
+
+def _to_batches(data: WindowData, batch_size: int, rng: np.random.Generator):
+    idx = rng.permutation(len(data))
+    for i in range(0, len(idx) - batch_size + 1, batch_size):
+        b = data.batch(idx[i : i + batch_size])
+        yield {
+            "xt": jnp.asarray(b.x_table), "xr1": jnp.asarray(b.x_row1),
+            "xr2": jnp.asarray(b.x_row2), "xn": jnp.asarray(b.x_norm),
+            "xf": jnp.asarray(b.x_freq), "xrc": jnp.asarray(b.x_rec),
+            "y": jnp.asarray(b.y_keep),
+        }
+
+
+def train_caching_model(data: WindowData, cfg: CachingModelConfig,
+                        epochs: int = 3, batch_size: int = 256,
+                        lr: float = 3e-3, seed: int = 0, log=None):
+    from repro.optim.adamw import OptConfig, init_opt
+
+    key = jax.random.PRNGKey(seed)
+    params = init_caching_model(key, cfg)
+    total = max(2, epochs * (len(data) // batch_size))
+    opt_cfg = OptConfig(lr=lr, weight_decay=0.0,
+                        warmup_steps=max(1, min(50, total // 10)),
+                        total_steps=total)
+    opt = init_opt(opt_cfg, params)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for ep in range(epochs):
+        for batch in _to_batches(data, batch_size, rng):
+            params, opt, loss = _train_step(params, opt, batch, opt_cfg)
+            losses.append(float(loss))
+        if log:
+            log(f"caching epoch {ep}: loss {np.mean(losses[-50:]):.4f}")
+    return params, losses
+
+
+def evaluate_caching_model(params, data: WindowData, batch_size: int = 1024):
+    """Accuracy vs Belady labels (paper: ~83%)."""
+    correct = total = 0
+    for i in range(0, len(data), batch_size):
+        b = data.batch(np.arange(i, min(i + batch_size, len(data))))
+        logits = caching_logits_batch(
+            params, jnp.asarray(b.x_table), jnp.asarray(b.x_row1),
+            jnp.asarray(b.x_row2), jnp.asarray(b.x_norm),
+            jnp.asarray(b.x_freq), jnp.asarray(b.x_rec)
+        )
+        pred = np.asarray(logits) > 0
+        correct += (pred == (b.y_keep > 0.5)).sum()
+        total += pred.size
+    return correct / max(total, 1)
+
+
+def predict_bits(params, data: WindowData, batch_size: int = 4096) -> np.ndarray:
+    """Keep-bits for every window, vectorized (the CPU-side inference)."""
+    outs = []
+    for i in range(0, len(data), batch_size):
+        b = data.batch(np.arange(i, min(i + batch_size, len(data))))
+        logits = caching_logits_batch(
+            params, jnp.asarray(b.x_table), jnp.asarray(b.x_row1),
+            jnp.asarray(b.x_row2), jnp.asarray(b.x_norm),
+            jnp.asarray(b.x_freq), jnp.asarray(b.x_rec)
+        )
+        outs.append(np.asarray(logits) > 0)
+    return np.concatenate(outs, axis=0)

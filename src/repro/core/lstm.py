@@ -1,0 +1,61 @@
+"""Seq2seq LSTM stacks with Luong attention, in pure JAX.
+
+The paper deliberately uses small LSTMs (not transformers) because the
+models run on *CPU* alongside DLRM inference (§V): the caching model is one
+encoder/decoder stack (~37K params), the prefetch model two stacks (~74K).
+These are the building blocks; the two models live in caching_model.py /
+prefetch_model.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def lstm_init(key, in_dim: int, hidden: int):
+    k1, _ = jax.random.split(key)
+    scale = 1.0 / math.sqrt(in_dim + hidden)
+    w = jax.random.normal(k1, (in_dim + hidden, 4 * hidden)) * scale
+    b = jnp.zeros((4 * hidden,))
+    # Forget-gate bias 1.0 (standard stabilization).
+    b = b.at[hidden : 2 * hidden].set(1.0)
+    return {"w": w, "b": b}
+
+
+def lstm_step(p, carry, x):
+    h, c = carry
+    z = jnp.concatenate([x, h], axis=-1) @ p["w"] + p["b"]
+    hid = h.shape[-1]
+    i, f, g, o = (z[..., :hid], z[..., hid:2*hid], z[..., 2*hid:3*hid],
+                  z[..., 3*hid:])
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_seq(p, xs, h0=None):
+    """xs: (T, in_dim) -> hs (T, hidden); returns (hs, (h_T, c_T))."""
+    hid = p["w"].shape[1] // 4
+    if h0 is None:
+        h0 = (jnp.zeros((hid,)), jnp.zeros((hid,)))
+    (hT, cT), hs = lax.scan(lambda c, x: lstm_step(p, c, x), h0, xs)
+    return hs, (hT, cT)
+
+
+def attn_init(key, hidden: int):
+    return {"wa": jax.random.normal(key, (hidden, hidden)) / math.sqrt(hidden)}
+
+
+def attend(p, h_dec, enc_hs):
+    """Luong general attention.  h_dec: (H,), enc_hs: (T, H) -> ctx (H,)."""
+    scores = enc_hs @ (p["wa"] @ h_dec)  # (T,)
+    w = jax.nn.softmax(scores)
+    return w @ enc_hs
+
+
+def n_params(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))

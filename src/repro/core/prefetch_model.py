@@ -1,0 +1,408 @@
+"""RecMG prefetch model (paper §V-B).
+
+Two seq2seq LSTM stacks + attention (~74K params).  Input: the same access
+chunk as the caching model.  Output: a *sequence* of |PO| = 5 predicted
+embedding-vector coordinates in the model's dense representation space —
+"the encoder/decoder pair naturally generates a dense representation of
+embedding vectors in a continuous space" (§V) — which is how RecMG sidesteps
+the million-way classification that OOMs Voyager-style one-hot labeling
+(§VII-B).
+
+Training: bidirectional Chamfer distance (Eq. 5, alpha=0.7) between the
+predicted set PO and the representations of the decoupled evaluation window
+W of the next |W| = 3*|PO| accesses.  Target representations are
+stop-gradiented (prevents the trivial collapse the paper's reverse term also
+guards against); the fixed normalized-index coordinate anchors the space.
+At deployment the predicted points snap to the nearest candidate vector by
+squared-L2 (a matmul), giving concrete indices to prefetch.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import lstm as LS
+from repro.core.chamfer import chamfer_bidirectional_vec, l2_truncated_vec
+from repro.core.features import ROW_BUCKETS, WindowData
+
+
+@dataclass(frozen=True)
+class PrefetchModelConfig:
+    n_tables: int = 856
+    table_emb: int = 8
+    row_emb: int = 8
+    hidden: int = 40
+    in_len: int = 15
+    out_len: int = 5  # |PO|
+    window: int = 15  # |W| = 3 * |PO| (paper Fig. 12 sensitivity)
+    alpha: float = 0.7
+    n_stacks: int = 2
+    backbone: str = "lstm"  # lstm (RecMG) | transformer (TransFetch-class
+    #   baseline: same featurization/loss/decode, transformer encoder —
+    #   reproduces the paper's TransFetch comparison incl. CPU cost)
+    loss: str = "chamfer"  # chamfer | l2 (ablation baseline)
+    norm_weight: float = 4.0  # weight of the fixed index coordinate
+    stat_weight: float = 2.0  # weight of the online freq/recency coords
+    diversity_weight: float = 0.1  # repulsion between predicted points
+    diversity_tau: float = 0.5
+
+    @property
+    def rep_dim(self) -> int:
+        # Output/decode representation space: stable per-id coordinates only.
+        return self.table_emb + 2 * self.row_emb + 1
+
+    @property
+    def in_dim(self) -> int:
+        # Encoder input: rep coords + online freq/recency.
+        return self.rep_dim + 2
+
+
+def init_prefetch_model(key, cfg: PrefetchModelConfig):
+    ks = jax.random.split(key, 12)
+    f = cfg.rep_dim
+    fin = cfg.in_dim
+    H = cfg.hidden
+    p = {
+        "table_emb": jax.random.normal(ks[0], (cfg.n_tables, cfg.table_emb)) * 0.3,
+        "row_emb1": jax.random.normal(ks[1], (ROW_BUCKETS[0], cfg.row_emb)) * 0.3,
+        "row_emb2": jax.random.normal(ks[2], (ROW_BUCKETS[1], cfg.row_emb)) * 0.3,
+        # Stack 1: encoder/decoder refining the access sequence.
+        "enc1": LS.lstm_init(ks[3], fin, H),
+        "dec1": LS.lstm_init(ks[4], 2 * H, H),
+        "attn1": LS.attn_init(ks[5], H),
+        # Output embedding layer (paper Fig. 5b): FC + projection into the
+        # representation space.
+        "w_fc": jax.random.normal(ks[9], (2 * H, H)) / math.sqrt(2 * H),
+        "b_fc": jnp.zeros((H,)),
+        "w_proj": jax.random.normal(ks[10], (H, f)) / math.sqrt(H),
+        "b_proj": jnp.zeros((f,)),
+        "y_in": jax.random.normal(ks[11], (f, 8)) / math.sqrt(f),
+    }
+    if cfg.backbone == "transformer":
+        # TransFetch-class encoder: replace the LSTM stacks with small
+        # self-attention blocks over the chunk.
+        del p["enc1"], p["dec1"], p["attn1"]
+        p["in_proj"] = jax.random.normal(ks[3], (fin, H)) / math.sqrt(fin)
+        p["pos_emb"] = jax.random.normal(ks[4], (cfg.in_len, H)) * 0.1
+        blocks = []
+        for i in range(2):
+            kk = jax.random.split(ks[5], 8)[4 * i : 4 * i + 4]
+            blocks.append({
+                "wq": jax.random.normal(kk[0], (H, H)) / math.sqrt(H),
+                "wk": jax.random.normal(kk[1], (H, H)) / math.sqrt(H),
+                "wv": jax.random.normal(kk[2], (H, H)) / math.sqrt(H),
+                "wo": jax.random.normal(kk[3], (H, H)) / math.sqrt(H),
+                "w1": jax.random.normal(kk[0], (H, 2 * H)) / math.sqrt(H),
+                "w2": jax.random.normal(kk[1], (2 * H, H)) / math.sqrt(2 * H),
+            })
+        p["tblocks"] = blocks
+    elif cfg.n_stacks >= 2:
+        p["enc2"] = LS.lstm_init(ks[6], H, H)
+    p["dec2"] = LS.lstm_init(ks[7], 8 + H, H)
+    p["attn2"] = LS.attn_init(ks[8], H)
+    return p
+
+
+def _transformer_encode(params, feats):
+    """feats: (T, fin) -> hs (T, H) via 2 tiny self-attention blocks."""
+    h = feats @ params["in_proj"] + params["pos_emb"][: feats.shape[0]]
+    for blk in params["tblocks"]:
+        q = h @ blk["wq"]
+        k = h @ blk["wk"]
+        v = h @ blk["wv"]
+        s = q @ k.T / math.sqrt(q.shape[-1])
+        h = h + jax.nn.softmax(s, axis=-1) @ v @ blk["wo"]
+        h = h + jax.nn.gelu(h @ blk["w1"]) @ blk["w2"]
+    return h
+
+
+def access_reps(params, cfg: PrefetchModelConfig, xt, xr1, xr2, xn):
+    """Stable representation-space coordinates of vector ids.
+    (..., T) ints -> (..., T, F).  This is the space Chamfer compares in and
+    nearest-neighbor decode searches in."""
+    return jnp.concatenate(
+        [
+            params["table_emb"][xt],
+            params["row_emb1"][xr1],
+            params["row_emb2"][xr2],
+            (xn * cfg.norm_weight)[..., None],
+        ],
+        axis=-1,
+    )
+
+
+def input_feats(params, cfg: PrefetchModelConfig, xt, xr1, xr2, xn, xf, xrc):
+    """Encoder inputs: rep coords + online freq/recency scalars."""
+    reps = access_reps(params, cfg, xt, xr1, xr2, xn)
+    return jnp.concatenate(
+        [reps, (xf * cfg.stat_weight)[..., None],
+         (xrc * cfg.stat_weight)[..., None]], axis=-1,
+    )
+
+
+def prefetch_predict(params, cfg: PrefetchModelConfig, xt, xr1, xr2, xn, xf, xrc):
+    """One window -> (out_len, F) predicted representation points."""
+    feats = input_feats(params, cfg, xt, xr1, xr2, xn, xf, xrc)
+    if cfg.backbone == "transformer":
+        hs2 = _transformer_encode(params, feats)
+        h = hs2[-1]
+        c = jnp.zeros_like(h)
+    else:
+        hs1, (h, c) = LS.lstm_seq(params["enc1"], feats)
+
+        def dec1_step(carry, enc_h):
+            (h, c) = carry
+            ctx = LS.attend(params["attn1"], h, hs1)
+            (h, c), out = LS.lstm_step(params["dec1"], (h, c),
+                                       jnp.concatenate([enc_h, ctx]))
+            return (h, c), out
+
+        (h, c), ds1 = lax.scan(dec1_step, (h, c), hs1)
+
+        if "enc2" in params:
+            hs2, (h, c) = LS.lstm_seq(params["enc2"], ds1)
+        else:
+            hs2 = ds1
+
+    f = cfg.rep_dim
+
+    def dec2_step(carry, _):
+        (h, c), prev = carry
+        ctx = LS.attend(params["attn2"], h, hs2)
+        x = jnp.concatenate([prev @ params["y_in"], ctx])
+        (h, c), _ = LS.lstm_step(params["dec2"], (h, c), x)
+        feat = jnp.tanh(jnp.concatenate([h, ctx]) @ params["w_fc"] + params["b_fc"])
+        y = feat @ params["w_proj"] + params["b_proj"]
+        return ((h, c), y), y
+
+    (_, _), ys = lax.scan(dec2_step, ((h, c), jnp.zeros((f,))),
+                          None, length=cfg.out_len)
+    return ys  # (out_len, F)
+
+
+def prefetch_predict_batch(params, cfg, xt, xr1, xr2, xn, xf, xrc):
+    return jax.vmap(
+        lambda a, b, c_, d, e, f: prefetch_predict(params, cfg, a, b, c_, d, e, f)
+    )(xt, xr1, xr2, xn, xf, xrc)
+
+
+def prefetch_loss(params, cfg: PrefetchModelConfig, batch):
+    po = prefetch_predict_batch(
+        params, cfg, batch["xt"], batch["xr1"], batch["xr2"], batch["xn"],
+        batch["xf"], batch["xrc"]
+    )  # (B, P, F)
+    wlen = cfg.window if cfg.loss == "chamfer" else cfg.out_len
+    w = jax.lax.stop_gradient(
+        access_reps(params, cfg, batch["wt"][:, :wlen], batch["wr1"][:, :wlen],
+                    batch["wr2"][:, :wlen], batch["wn"][:, :wlen])
+    )  # (B, W, F)
+    if cfg.loss == "l2":
+        return l2_truncated_vec(po, w).mean()
+    loss = chamfer_bidirectional_vec(po, w, cfg.alpha).mean()
+    if cfg.diversity_weight:
+        # Repulsion between predicted points: counters the duplicate-output
+        # collapse the paper's reverse Chamfer term fights (§V-B).
+        d = po[:, :, None, :] - po[:, None, :, :]
+        d2 = (d * d).sum(-1)
+        P = po.shape[1]
+        off = 1.0 - jnp.eye(P)
+        rep = (jnp.exp(-d2 / cfg.diversity_tau) * off).sum(-1).sum(-1) / (P * (P - 1))
+        loss = loss + cfg.diversity_weight * rep.mean()
+    return loss
+
+
+@partial(jax.jit, static_argnums=(3, 4))
+def _train_step(params, opt, batch, cfg, opt_cfg):
+    from repro.optim.adamw import apply_updates
+
+    loss, grads = jax.value_and_grad(
+        lambda p: prefetch_loss(p, cfg, batch)
+    )(params)
+    params, opt, _ = apply_updates(opt_cfg, params, opt, grads)
+    return params, opt, loss
+
+
+def window_int_features(trace, starts, wlen, stats=None):
+    """Raw int features of the future window for target representations."""
+    from repro.core.features import _stack_windows, access_stats
+
+    row = trace.row_id
+    freq, rec = stats if stats is not None else access_stats(trace.global_id)
+    return {
+        "wt": _stack_windows(trace.table_id.astype(np.int32), starts, wlen),
+        "wr1": _stack_windows((row % ROW_BUCKETS[0]).astype(np.int32), starts, wlen),
+        "wr2": _stack_windows(((row // ROW_BUCKETS[0]) % ROW_BUCKETS[1]).astype(np.int32),
+                              starts, wlen),
+        "wn": _stack_windows(
+            (trace.global_id / max(trace.n_vectors, 1)).astype(np.float32),
+            starts, wlen),
+        "wf": _stack_windows(freq, starts, wlen),
+        "wrc": _stack_windows(rec, starts, wlen),
+    }
+
+
+@dataclass
+class PrefetchData:
+    """WindowData + raw int features of each future window."""
+
+    base: WindowData
+    w_feats: Dict[str, np.ndarray]
+
+    def __len__(self):
+        return len(self.base)
+
+    def batch_dict(self, idx) -> Dict[str, jnp.ndarray]:
+        b = self.base.batch(idx)
+        d = {
+            "xt": jnp.asarray(b.x_table), "xr1": jnp.asarray(b.x_row1),
+            "xr2": jnp.asarray(b.x_row2), "xn": jnp.asarray(b.x_norm),
+            "xf": jnp.asarray(b.x_freq), "xrc": jnp.asarray(b.x_rec),
+        }
+        for k, v in self.w_feats.items():
+            d[k] = jnp.asarray(v[idx])
+        return d
+
+
+def make_prefetch_data(trace, in_len=15, window=15, stride=5,
+                       miss_mask: Optional[np.ndarray] = None) -> PrefetchData:
+    """miss_mask: per-access OPT-miss bits — when given, the ground-truth
+    window W is the next `window` *missing* accesses (the paper's prefetch
+    trace: "embedding vectors leading to cache misses", §VI-A)."""
+    from repro.core.features import access_stats, make_windows
+
+    stats = access_stats(trace.global_id)
+    base = make_windows(trace, in_len=in_len, out_window=window, stride=stride,
+                        stats=stats)
+    starts = np.arange(in_len, len(trace) - window - 1, stride,
+                       dtype=np.int64)[: len(base)]
+    if miss_mask is None:
+        return PrefetchData(base, window_int_features(trace, starts, window, stats))
+
+    # Gather the first `window` miss positions at/after each start.
+    mpos = np.nonzero(miss_mask)[0]
+    j = np.searchsorted(mpos, starts)
+    keep = j < max(len(mpos) - window, 1)  # aligned with base rows
+    j = j[keep]
+    idx = np.minimum(j[:, None] + np.arange(window)[None, :], len(mpos) - 1)
+    flat = mpos[idx]  # (N, window) absolute access positions of misses
+
+    row = trace.row_id
+    gid = trace.global_id
+    freq, rec = stats
+    w_feats = {
+        "wt": trace.table_id.astype(np.int32)[flat],
+        "wr1": (row % ROW_BUCKETS[0]).astype(np.int32)[flat],
+        "wr2": ((row // ROW_BUCKETS[0]) % ROW_BUCKETS[1]).astype(np.int32)[flat],
+        "wn": (gid / max(trace.n_vectors, 1)).astype(np.float32)[flat],
+        "wf": freq[flat],
+        "wrc": rec[flat],
+    }
+    base = base.batch(np.nonzero(keep)[0])
+    return PrefetchData(base, w_feats)
+
+
+def train_prefetch_model(data: PrefetchData, cfg: PrefetchModelConfig,
+                         epochs: int = 3, batch_size: int = 256,
+                         lr: float = 3e-3, seed: int = 0, log=None):
+    from repro.optim.adamw import OptConfig, init_opt
+
+    params = init_prefetch_model(jax.random.PRNGKey(seed), cfg)
+    steps_per_epoch = max(1, len(data) // batch_size)
+    total = max(2, epochs * steps_per_epoch)
+    opt_cfg = OptConfig(lr=lr, weight_decay=0.0,
+                        warmup_steps=max(1, min(50, total // 10)),
+                        total_steps=total)
+    opt = init_opt(opt_cfg, params)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for ep in range(epochs):
+        idx = rng.permutation(len(data))
+        for i in range(0, len(idx) - batch_size + 1, batch_size):
+            batch = data.batch_dict(idx[i : i + batch_size])
+            params, opt, loss = _train_step(params, opt, batch, cfg, opt_cfg)
+            losses.append(float(loss))
+        if log:
+            log(f"prefetch epoch {ep}: loss {np.mean(losses[-50:]):.5f}")
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Deployment: snap predicted points to real vector ids + quality metrics
+# ---------------------------------------------------------------------------
+
+
+def candidate_reps(params, cfg: PrefetchModelConfig, cand_ids: np.ndarray,
+                   trace) -> jnp.ndarray:
+    """Representation matrix of candidate vector ids.  (C, F)."""
+    offs = trace.table_offsets
+    t = np.searchsorted(offs, cand_ids, side="right") - 1
+    row = cand_ids - offs[t]
+    xn = cand_ids / max(trace.n_vectors, 1)
+    return access_reps(
+        params, cfg, jnp.asarray(t.astype(np.int32)),
+        jnp.asarray((row % ROW_BUCKETS[0]).astype(np.int32)),
+        jnp.asarray(((row // ROW_BUCKETS[0]) % ROW_BUCKETS[1]).astype(np.int32)),
+        jnp.asarray(xn.astype(np.float32)),
+    )
+
+
+@jax.jit
+def _nn_decode(points, cand):
+    """points: (N, F), cand: (C, F) -> (N,) argmin squared-L2 (via matmul)."""
+    p2 = (points * points).sum(-1, keepdims=True)
+    c2 = (cand * cand).sum(-1)
+    d = p2 + c2[None, :] - 2.0 * points @ cand.T
+    return jnp.argmin(d, axis=1)
+
+
+def decode_to_ids(params, cfg: PrefetchModelConfig, po_points: np.ndarray,
+                  cand_ids: np.ndarray, trace,
+                  chunk: int = 65536) -> np.ndarray:
+    """po_points: (N, P, F) -> (N, P) vector ids (nearest candidate)."""
+    cand = candidate_reps(params, cfg, cand_ids, trace)
+    flat = po_points.reshape(-1, po_points.shape[-1])
+    outs = []
+    for i in range(0, len(flat), chunk):
+        idx = _nn_decode(jnp.asarray(flat[i : i + chunk]), cand)
+        outs.append(np.asarray(idx))
+    nn = np.concatenate(outs)
+    return cand_ids[nn].reshape(po_points.shape[:-1])
+
+
+def predict_sequences(params, cfg: PrefetchModelConfig, data,
+                      batch_size: int = 4096) -> np.ndarray:
+    """(N, P, F) predicted representation points for every window."""
+    base = data.base if isinstance(data, PrefetchData) else data
+    outs = []
+    for i in range(0, len(base), batch_size):
+        b = base.batch(np.arange(i, min(i + batch_size, len(base))))
+        po = prefetch_predict_batch(
+            params, cfg, jnp.asarray(b.x_table), jnp.asarray(b.x_row1),
+            jnp.asarray(b.x_row2), jnp.asarray(b.x_norm),
+            jnp.asarray(b.x_freq), jnp.asarray(b.x_rec)
+        )
+        outs.append(np.asarray(po))
+    return np.concatenate(outs, axis=0)
+
+
+def sequence_metrics(po_ids: np.ndarray, gt_windows: np.ndarray) -> dict:
+    """Correctness (frac of PO appearing in the window) + coverage (Eq. 2)."""
+    correct = 0
+    covered = 0
+    gt_unique_total = 0
+    for po, w in zip(po_ids, gt_windows):
+        ws = set(int(x) for x in w)
+        correct += sum(int(p) in ws for p in po)
+        covered += len(set(int(p) for p in po) & ws)
+        gt_unique_total += len(ws)
+    return {
+        "correctness": correct / max(po_ids.size, 1),
+        "coverage": covered / max(gt_unique_total, 1),
+    }

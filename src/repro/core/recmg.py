@@ -1,0 +1,167 @@
+"""RecMG end-to-end policy: the two models co-managing the buffer.
+
+The buffer-state never feeds back into the *models* (they condition only on
+the access history), so model inference over a whole trace is vectorized in
+one jitted pass — exactly the paper's CPU-side pipelined deployment, where
+predictions for chunk t are computed while the accelerator serves chunk t-1
+(``pipelined=True`` applies outputs one chunk late to model that skew).
+
+``run_recmg`` produces the Figure-14-style access breakdown: buffer hits due
+to the caching policy, hits due to prefetch, and on-demand fetches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.buffer_manager import RecMGBuffer
+from repro.core.cache_sim import FALRU, SimResult
+from repro.core.caching_model import (CachingModelConfig, predict_bits)
+from repro.core.features import WindowData, make_windows
+from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
+                                       decode_to_ids, make_prefetch_data,
+                                       predict_sequences)
+from repro.core.trace import Trace
+
+
+@dataclass
+class RecMGOutputs:
+    """Precomputed model outputs for every chunk of a trace."""
+
+    chunk_starts: np.ndarray  # (C,) index of first access of each chunk
+    caching_bits: Optional[np.ndarray]  # (C, in_len) bool
+    prefetch_ids: Optional[np.ndarray]  # (C, out_len) int64
+
+
+def precompute_outputs(trace: Trace, caching=None, prefetch=None,
+                       in_len: int = 15, out_len: int = 5,
+                       n_candidates: int = 5000) -> RecMGOutputs:
+    """Vectorized model inference over all chunks (stride = in_len).
+
+    Prefetch decode snaps predicted representation points to the nearest of
+    the ``n_candidates`` most-frequent vectors (the deployment's candidate
+    pool — cold vectors aren't worth prefetching)."""
+    data = make_windows(trace, in_len=in_len, out_window=out_len,
+                        stride=in_len)
+    starts = np.arange(in_len, len(trace) - out_len - 1, in_len)[: len(data)]
+
+    bits = None
+    if caching is not None:
+        params, _cfg = caching
+        bits = predict_bits(params, data)
+
+    ids = None
+    if prefetch is not None:
+        params, pcfg = prefetch
+        po = predict_sequences(params, pcfg, data)
+        gid = trace.global_id
+        vals, counts = np.unique(gid, return_counts=True)
+        top = np.argsort(counts)[::-1][:n_candidates]
+        cand = np.sort(vals[top])
+        ids = decode_to_ids(params, pcfg, po, cand, trace)
+    return RecMGOutputs(starts, bits, ids)
+
+
+def run_recmg(trace: Trace, capacity: int, outputs: RecMGOutputs,
+              eviction_speed: int = 4, pipelined: bool = True,
+              use_caching: bool = True, use_prefetch: bool = True,
+              oracle_bits: Optional[np.ndarray] = None) -> SimResult:
+    """Replay a trace through the RecMG-managed buffer.
+
+    oracle_bits: per-access Belady keep labels — upper-bound variant used by
+    benchmarks ("what if the caching model were perfect").
+    """
+    keys = trace.global_id
+    n = len(keys)
+    buf = RecMGBuffer(capacity, eviction_speed)
+    res = SimResult()
+    prefetched = set()
+
+    in_len = (
+        outputs.caching_bits.shape[1]
+        if outputs.caching_bits is not None
+        else 15
+    )
+    chunk_of = {int(s): i for i, s in enumerate(outputs.chunk_starts)}
+
+    pending = None  # (trunk, bits, prefetch) applied at next chunk boundary
+
+    for i in range(n):
+        k = int(keys[i])
+        hit = buf.contains(k)
+        res.accesses += 1
+        if hit:
+            res.hits += 1
+            if k in prefetched:
+                res.prefetch_hits += 1
+                res.prefetch_useful += 1
+                prefetched.discard(k)
+        else:
+            res.on_demand += 1
+            prefetched.discard(k)
+            # On-demand fetch: enters the buffer at base priority; the
+            # caching model's bit arrives with load_embeddings below.
+            buf.fetch(k, eviction_speed)
+
+        ci = chunk_of.get(i)
+        if ci is None:
+            continue
+        # Chunk boundary: run Algorithm 1 for the *previous* chunk.
+        trunk = keys[max(0, i - in_len): i].astype(np.int64)
+        if oracle_bits is not None:
+            bits = oracle_bits[max(0, i - in_len): i]
+        elif outputs.caching_bits is not None and use_caching:
+            bits = outputs.caching_bits[ci]
+        else:
+            bits = np.zeros(len(trunk), dtype=np.int64)
+        pf = (
+            outputs.prefetch_ids[ci]
+            if (outputs.prefetch_ids is not None and use_prefetch)
+            else []
+        )
+        item = (trunk.tolist(), list(np.asarray(bits).astype(int)),
+                [int(p) for p in pf])
+        if pipelined:
+            item, pending = pending, item
+            if item is None:
+                continue
+        t_, b_, p_ = item
+        for p in p_:
+            if not buf.contains(p):
+                prefetched.add(p)
+                res.prefetch_issued += 1
+        buf.load_embeddings(t_, b_, p_)
+    return res
+
+
+def run_lru_pf(trace: Trace, capacity: int, outputs: RecMGOutputs) -> SimResult:
+    """LRU + our prefetch model (the paper's single-model ablation LRU+PF)."""
+    keys = trace.global_id
+    cache = FALRU(capacity)
+    res = SimResult()
+    prefetched = set()
+    chunk_of = {int(s): i for i, s in enumerate(outputs.chunk_starts)}
+    for i in range(len(keys)):
+        k = int(keys[i])
+        hit = cache.access(k)
+        res.accesses += 1
+        if hit:
+            res.hits += 1
+            if k in prefetched:
+                res.prefetch_hits += 1
+                res.prefetch_useful += 1
+                prefetched.discard(k)
+        else:
+            res.on_demand += 1
+            prefetched.discard(k)
+        ci = chunk_of.get(i)
+        if ci is not None and outputs.prefetch_ids is not None:
+            for p in outputs.prefetch_ids[ci]:
+                p = int(p)
+                if not cache.contains(p):
+                    cache.insert_prefetch(p)
+                    prefetched.add(p)
+                    res.prefetch_issued += 1
+    return res

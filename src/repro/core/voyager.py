@@ -1,0 +1,151 @@
+"""Voyager-style hierarchical classification prefetcher [71] — the paper's
+other ML baseline, implemented to *demonstrate its scaling failure* on
+embedding traces (paper §VII-B: one-hot labeling over millions of vectors
+OOMs even on a 512GB host).
+
+Voyager decomposes an address into (page, offset) and predicts each with a
+softmax.  Mapped to embedding ids: page = gid // page_size, offset =
+gid % page_size.  The output layers are (hidden x n_pages) and (hidden x
+page_size): at production scale (62M vectors / 256 = 242K pages) the page
+softmax alone is ~10M params and the training labels are one-hot over it —
+`label_memory_bytes` quantifies the blow-up the paper reports.  At bench
+scale it trains fine, which lets us also reproduce the cost comparison.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import lstm as LS
+from repro.core.features import ROW_BUCKETS, WindowData
+
+
+@dataclass(frozen=True)
+class VoyagerConfig:
+    n_vectors: int = 480_000
+    page_size: int = 256
+    hidden: int = 40
+    in_len: int = 15
+    table_emb: int = 8
+    row_emb: int = 8
+
+    @property
+    def n_pages(self) -> int:
+        return (self.n_vectors + self.page_size - 1) // self.page_size
+
+
+def label_memory_bytes(cfg: VoyagerConfig, n_samples: int,
+                       one_hot: bool = True) -> int:
+    """Training-label footprint — the quantity that OOMs at paper scale.
+
+    Voyager's formulation stores one-hot page labels; 62M vectors ->
+    242K-way one-hot per sample: 400M samples x 242K x 1B ~ 10^16 bytes.
+    """
+    per = cfg.n_pages + cfg.page_size if one_hot else 8
+    return n_samples * per
+
+
+def init_voyager(key, cfg: VoyagerConfig, n_tables: int):
+    ks = jax.random.split(key, 8)
+    f = cfg.table_emb + 2 * cfg.row_emb + 1
+    H = cfg.hidden
+    return {
+        "table_emb": jax.random.normal(ks[0], (n_tables, cfg.table_emb)) * 0.1,
+        "row_emb1": jax.random.normal(ks[1], (ROW_BUCKETS[0], cfg.row_emb)) * 0.1,
+        "row_emb2": jax.random.normal(ks[2], (ROW_BUCKETS[1], cfg.row_emb)) * 0.1,
+        "enc": LS.lstm_init(ks[3], f, H),
+        # The two classification heads — the scaling bottleneck.
+        "w_page": jax.random.normal(ks[4], (H, cfg.n_pages)) / math.sqrt(H),
+        "w_off": jax.random.normal(ks[5], (H, cfg.page_size)) / math.sqrt(H),
+    }
+
+
+def _encode(params, cfg, xt, xr1, xr2, xn):
+    feats = jnp.concatenate(
+        [params["table_emb"][xt], params["row_emb1"][xr1],
+         params["row_emb2"][xr2], xn[:, None]], axis=-1)
+    _, (h, _) = LS.lstm_seq(params["enc"], feats)
+    return h
+
+
+def voyager_logits(params, cfg: VoyagerConfig, xt, xr1, xr2, xn):
+    h = _encode(params, cfg, xt, xr1, xr2, xn)
+    return h @ params["w_page"], h @ params["w_off"]
+
+
+voyager_logits_batch = jax.vmap(voyager_logits,
+                                in_axes=(None, None, 0, 0, 0, 0))
+
+
+def voyager_loss(params, cfg: VoyagerConfig, batch):
+    pl_, ol = voyager_logits_batch(
+        params, cfg, batch["xt"], batch["xr1"], batch["xr2"], batch["xn"])
+    lp = jax.nn.log_softmax(pl_, axis=-1)
+    lo = jax.nn.log_softmax(ol, axis=-1)
+    npage = jnp.take_along_axis(lp, batch["page"][:, None], 1)[:, 0]
+    noff = jnp.take_along_axis(lo, batch["off"][:, None], 1)[:, 0]
+    return -(npage + noff).mean()
+
+
+@partial(jax.jit, static_argnums=(3, 4))
+def _train_step(params, opt, batch, cfg, opt_cfg):
+    from repro.optim.adamw import apply_updates
+
+    loss, grads = jax.value_and_grad(
+        lambda p: voyager_loss(p, cfg, batch))(params)
+    params, opt, _ = apply_updates(opt_cfg, params, opt, grads)
+    return params, opt, loss
+
+
+def train_voyager(data: WindowData, cfg: VoyagerConfig, n_tables: int,
+                  epochs: int = 3, batch_size: int = 512, lr: float = 5e-3,
+                  seed: int = 0):
+    """Targets: the NEXT access's (page, offset) after each window."""
+    from repro.optim.adamw import OptConfig, init_opt
+
+    params = init_voyager(jax.random.PRNGKey(seed), cfg, n_tables)
+    total = max(2, epochs * (len(data) // batch_size))
+    opt_cfg = OptConfig(lr=lr, weight_decay=0.0,
+                        warmup_steps=max(1, min(50, total // 10)),
+                        total_steps=total)
+    opt = init_opt(opt_cfg, params)
+    gid_next = np.round(data.y_window[:, 0] * cfg.n_vectors).astype(np.int64)
+    pages = (gid_next // cfg.page_size).astype(np.int32)
+    offs = (gid_next % cfg.page_size).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for _ in range(epochs):
+        idx = rng.permutation(len(data))
+        for i in range(0, len(idx) - batch_size + 1, batch_size):
+            b = data.batch(idx[i : i + batch_size])
+            batch = {
+                "xt": jnp.asarray(b.x_table), "xr1": jnp.asarray(b.x_row1),
+                "xr2": jnp.asarray(b.x_row2), "xn": jnp.asarray(b.x_norm),
+                "page": jnp.asarray(pages[idx[i : i + batch_size]]),
+                "off": jnp.asarray(offs[idx[i : i + batch_size]]),
+            }
+            params, opt, loss = _train_step(params, opt, batch, cfg, opt_cfg)
+            losses.append(float(loss))
+    return params, losses
+
+
+def predict_next(params, cfg: VoyagerConfig, data: WindowData,
+                 batch_size: int = 4096) -> np.ndarray:
+    """Top-1 predicted next vector id per window."""
+    outs = []
+    for i in range(0, len(data), batch_size):
+        b = data.batch(np.arange(i, min(i + batch_size, len(data))))
+        pl_, ol = voyager_logits_batch(
+            params, cfg, jnp.asarray(b.x_table), jnp.asarray(b.x_row1),
+            jnp.asarray(b.x_row2), jnp.asarray(b.x_norm))
+        page = np.asarray(jnp.argmax(pl_, -1))
+        off = np.asarray(jnp.argmax(ol, -1))
+        outs.append(page.astype(np.int64) * cfg.page_size + off)
+    return np.concatenate(outs)

@@ -1,0 +1,114 @@
+"""Fault-tolerance and straggler-mitigation utilities for the train loop.
+
+Designed for 1000+-node operation; everything here is host-side control
+logic (no accelerator state), so it composes with any jitted step:
+
+  * ``retry_step`` — transient-failure retry with exponential backoff
+    (XLA RESOURCE_EXHAUSTED / network blips);
+  * ``StragglerMonitor`` — EWMA step-time tracker; flags hosts whose step
+    times exceed k·sigma so the controller can re-shard around them
+    (in single-controller JAX the action is: checkpoint + elastic restart
+    without the slow host);
+  * ``ElasticMesh`` — re-factor the mesh to the currently-live device count
+    (restore path re-device_puts checkpointed leaves onto the new mesh);
+  * ``Heartbeat`` — periodic liveness file for external supervisors
+    (k8s/slurm) to detect hangs and restart the job.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+
+def retry_step(fn: Callable, *args, retries: int = 3, backoff_s: float = 0.5,
+               on_retry: Optional[Callable] = None):
+    """Run fn(*args); retry transient failures with exponential backoff."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args)
+        except Exception as e:  # noqa: BLE001 — deliberate catch-all boundary
+            attempt += 1
+            if attempt > retries:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker with outlier detection."""
+
+    alpha: float = 0.1
+    k_sigma: float = 3.0
+    warmup: int = 10
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    slow_steps: List[int] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        self.n += 1
+        if self.n == 1:
+            self.mean = dt
+            return False
+        slow = False
+        if self.n > self.warmup:
+            sd = math.sqrt(max(self.var, 1e-12))
+            if dt > self.mean + self.k_sigma * sd and dt > 1.2 * self.mean:
+                slow = True
+                self.slow_steps.append(step)
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return slow
+
+    def summary(self):
+        return {"mean_s": round(self.mean, 4),
+                "std_s": round(math.sqrt(max(self.var, 0.0)), 4),
+                "stragglers": len(self.slow_steps)}
+
+
+class ElasticMesh:
+    """Re-factor (data, model) to the live device count on restart.
+
+    model_parallel is treated as an upper bound: if devices were lost and
+    the count no longer factors, model parallelism shrinks to the largest
+    divisor — training resumes at reduced TP rather than not at all."""
+
+    def __init__(self, model_parallel: int = 1):
+        self.model_parallel = model_parallel
+
+    def make(self):
+        n = len(jax.devices())
+        mp = self.model_parallel
+        while n % mp:
+            mp -= 1
+        return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+class Heartbeat:
+    def __init__(self, path: str, every_s: float = 30.0):
+        self.path = Path(path)
+        self.every_s = every_s
+        self._last = 0.0
+
+    def beat(self, step: int, **info):
+        now = time.time()
+        if now - self._last < self.every_s:
+            return
+        self._last = now
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"step": step, "time": now, **info}))
+        os.replace(tmp, self.path)

@@ -1,0 +1,55 @@
+"""Fused embedding gather + sum-pool Pallas TPU kernel.
+
+This is the paper's hot spot: multi-hot lookups into large embedding tables
+(TorchRec's fused kernels on GPU).  TPU-native formulation: the multi-hot
+index matrix is *scalar-prefetched* so it can drive ``BlockSpec.index_map``
+— each grid step DMAs exactly one needed table row HBM->VMEM (no
+gather-scatter in registers, rows stream through the MXU-aligned 128-lane
+layout) and accumulates the pool sum in the revisited output block.
+
+Grid: (batch, pooling) with the pooling axis innermost — the output block
+(1, D) stays resident in VMEM across the whole pooling loop and is written
+back once (TPU grids are sequential, revisited blocks are kept live).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_pool_kernel(idx_ref, table_ref, out_ref):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...].astype(out_ref.dtype)
+
+
+def gather_pool(table: jax.Array, idx: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """table: (N, D); idx: (B, P) int32 -> pooled (B, D) = sum_p table[idx].
+
+    D should be a multiple of 128 (lane width) for the non-interpret path.
+    """
+    B, P = idx.shape
+    N, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, p, idx_ref: (idx_ref[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, p, idx_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _gather_pool_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table)

@@ -1,0 +1,96 @@
+"""Causal flash-attention Pallas TPU kernel.
+
+The LM serving/training cells of the assigned pool are attention-dominant at
+32k sequence length; this kernel is the TPU-native fused form: online
+softmax with VMEM-resident (bq, hd) accumulators, KV streamed block-by-block
+as the innermost (sequential) grid axis, output written once on the last KV
+step.  The XLA fallback (models/layers.blocked_causal_attention) implements
+the same algorithm; this kernel removes the per-block HBM round-trips.
+
+Layout: heads are folded into the leading grid axis — q (BH, S, hd); GQA is
+handled by the ops.py wrapper (repeats KV heads before the call).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, scale: float, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = q_pos >= k_pos
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(jnp.where(m_prev == -jnp.inf, 0.0, m_prev - m_new))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Causal attention.  q/k/v: (BH, S, hd) same head count -> (BH, S, hd).
+
+    Blocks past the causal frontier are masked (a production splash kernel
+    would skip them with a sparse grid map — see DESIGN.md perf notes).
+    """
+    BH, S, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_kv = S // bk
+    grid = (BH, S // bq, n_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

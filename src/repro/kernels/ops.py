@@ -1,0 +1,51 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On TPU the real kernels run; everywhere else (this CPU container, unit
+tests) the wrappers fall back to the jnp reference implementation, and the
+kernels themselves are validated in ``interpret=True`` mode (Python
+execution of the kernel body) against the same references.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chamfer_kernel import chamfer as _chamfer_pallas
+from repro.kernels.embedding_gather import gather_pool as _gather_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.lstm_cell import lstm_cell as _lstm_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def gather_pool(table, idx, use_pallas: bool = False):
+    if use_pallas and on_tpu():
+        return _gather_pallas(table, idx)
+    return ref.gather_pool_ref(table, idx)
+
+
+@partial(jax.jit, static_argnames=("alpha", "use_pallas"))
+def chamfer(po, w, alpha: float = 0.7, use_pallas: bool = False):
+    if use_pallas and on_tpu():
+        return _chamfer_pallas(po, w, alpha)
+    return ref.chamfer_ref(po, w, alpha)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def flash_attention(q, k, v, use_pallas: bool = False):
+    if use_pallas and on_tpu():
+        return _flash_pallas(q, k, v)
+    return ref.flash_attention_ref(q, k, v)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def lstm_cell(x, h, c, w, b, use_pallas: bool = False):
+    if use_pallas and on_tpu():
+        return _lstm_pallas(x, h, c, w, b)
+    return ref.lstm_cell_ref(x, h, c, w, b)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pool_ref(table, idx):
+    """table: (N, D); idx: (B, P) -> (B, D) sum-pool."""
+    return table[idx].astype(jnp.float32).sum(axis=1)
+
+
+def chamfer_ref(po, w, alpha: float = 0.7):
+    """po: (B, P, F); w: (B, W, F) -> (B,)."""
+    po = po.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    d = po[:, :, None, :] - w[:, None, :, :]
+    d2 = (d * d).sum(-1)
+    fwd = d2.min(axis=2).mean(axis=1)
+    bwd = d2.min(axis=1).mean(axis=1)
+    return alpha * fwd + (1 - alpha) * bwd
+
+
+def flash_attention_ref(q, k, v):
+    """Causal attention oracle.  q/k/v: (BH, S, hd)."""
+    S, hd = q.shape[1], q.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum(
+        "bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def lstm_cell_ref(x, h, c, w, b):
+    """Batched LSTM cell oracle (matches core/lstm.lstm_step math)."""
+    z = jnp.concatenate([x, h], axis=1).astype(jnp.float32) @ w.astype(
+        jnp.float32) + b
+    H = h.shape[1]
+    i, f, g, o = (z[:, :H], z[:, H:2*H], z[:, 2*H:3*H], z[:, 3*H:])
+    c2 = jax.nn.sigmoid(f) * c.astype(jnp.float32) + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+    return h2.astype(h.dtype), c2

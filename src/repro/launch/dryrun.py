@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Only the dry-run gets 512 placeholder devices.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ALL_ARCHS,
+    RunConfig,
+    auto_microbatches,
+    get_config,
+    shape_applicable,
+    shapes_for,
+)
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_train_step, opt_struct_and_specs  # noqa: E402
+from repro.models.model_api import build  # noqa: E402
+from repro.optim.adamw import OptConfig  # noqa: E402
+from repro.sharding.partition import (  # noqa: E402
+    activation_sharding,
+    batch_pspecs,
+    cache_pspecs,
+    data_axes,
+    param_pspecs,
+    to_shardings,
+)
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    shape = shapes_for(cfg)[shape_name]
+    return build(cfg).batch_struct(shape)
+
+
+def _sizeof(struct, pspecs, mesh) -> int:
+    """Per-device bytes of a sharded pytree (structural estimate)."""
+    import jax.tree_util as jtu
+
+    total = 0
+    flat_s = jtu.tree_leaves(struct)
+    flat_p = jtu.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_s, flat_p):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for ent in spec:
+            if ent is None:
+                continue
+            for ax in (ent,) if isinstance(ent, str) else ent:
+                shards *= mesh.shape[ax]
+        total += n * leaf.dtype.itemsize // shards
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               run: RunConfig, opt_cfg: OptConfig | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = shapes_for(cfg)[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    meta = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind}
+    if not ok:
+        return {**meta, "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+    bundle = build(cfg, run)
+    param_struct = bundle.param_struct()
+    pspecs = param_pspecs(param_struct, mesh, run.sharding, run.emb_rows)
+    param_sh = to_shardings(pspecs, mesh)
+    batch_struct = bundle.batch_struct(shape)
+    batch_sh = to_shardings(batch_pspecs(batch_struct, mesh, run.sharding),
+                            mesh)
+
+    opt_cfg = opt_cfg or OptConfig(moment_dtype=run.opt_dtype)
+    microbatches = run.microbatches or auto_microbatches(cfg, shape, n_data)
+    meta["microbatches"] = microbatches
+
+    with mesh, activation_sharding(mesh, run.sharding):
+        if shape.kind == "train":
+            step = make_train_step(
+                bundle, opt_cfg, microbatches, mesh=mesh,
+                grad_pspecs=pspecs if run.constrain_grads else None)
+            opt_struct, opt_pspecs = opt_struct_and_specs(bundle, pspecs, opt_cfg)
+            opt_sh = to_shardings(opt_pspecs, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(param_struct, opt_struct, batch_struct)
+        elif shape.kind == "prefill":
+            lowered = jax.jit(
+                bundle.prefill,
+                in_shardings=(param_sh, batch_sh),
+            ).lower(param_struct, batch_struct)
+        else:  # decode
+            cache_struct = bundle.cache_struct(shape)
+            cache_sh = to_shardings(
+                cache_pspecs(cache_struct, mesh, run.shard_kv_seq), mesh
+            )
+            token_struct = batch_struct["token"]
+            token_sh = to_shardings(
+                batch_pspecs(token_struct, mesh, run.sharding), mesh)
+            lowered = jax.jit(
+                bundle.decode,
+                in_shardings=(param_sh, token_sh, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            ).lower(param_struct, token_struct, cache_struct)
+        t_lower = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    result = {**meta, "status": "ok", "t_lower_s": round(t_lower, 1),
+              "t_compile_s": round(t_compile, 1),
+              "devices": int(mesh.devices.size)}
+
+    try:
+        ma = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(ma, k)
+        }
+        print(f"[{arch}/{shape_name}/{mesh_name}] memory_analysis:", ma)
+    except Exception as e:  # CPU backend may not implement it
+        result["memory_analysis_error"] = str(e)
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        result["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals") or "bytes" in k
+            )
+        }
+        print(f"[{arch}/{shape_name}/{mesh_name}] cost_analysis: "
+              f"flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+    except Exception as e:
+        result["cost_analysis_error"] = str(e)
+
+    try:
+        text = compiled.as_text()
+        result["collectives"] = analyze(text)
+        result["hlo_chars"] = len(text)
+    except Exception as e:
+        result["collectives_error"] = str(e)
+
+    # Structural per-device sizes (works regardless of backend support).
+    result["param_bytes_per_device"] = _sizeof(param_struct, pspecs, mesh)
+    result["n_params"] = bundle.n_params()
+    result["n_active_params"] = bundle.n_active_params()
+    result["run_config"] = {
+        "remat": run.remat, "sharding": run.sharding,
+        "microbatches": microbatches, "opt_dtype": run.opt_dtype,
+        "logits_chunk": run.logits_chunk, "shard_kv_seq": run.shard_kv_seq,
+        "constrain_grads": run.constrain_grads, "emb_rows": run.emb_rows,
+        "dlrm_sharded_lookup": run.dlrm_sharded_lookup,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--sharding", default="fsdp_tp")
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--logits-chunk", type=int, default=0)
+    ap.add_argument("--attn-block-q", type=int, default=512)
+    ap.add_argument("--attn-block-kv", type=int, default=512)
+    ap.add_argument("--no-shard-kv-seq", action="store_true")
+    ap.add_argument("--constrain-grads", action="store_true")
+    ap.add_argument("--emb-rows", default="all", choices=["all", "model"])
+    ap.add_argument("--dlrm-sharded-lookup", action="store_true")
+    ap.add_argument("--moe-local-dispatch", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else list(shapes_for(cfg))
+        for s in shapes:
+            cells.append((arch, s))
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    run = RunConfig(
+        microbatches=args.microbatches,
+        remat=args.remat,
+        sharding=args.sharding,
+        opt_dtype=args.opt_dtype,
+        logits_chunk=args.logits_chunk,
+        attn_block_q=args.attn_block_q,
+        attn_block_kv=args.attn_block_kv,
+        shard_kv_seq=not args.no_shard_kv_seq,
+        constrain_grads=args.constrain_grads,
+        emb_rows=args.emb_rows,
+        dlrm_sharded_lookup=args.dlrm_sharded_lookup,
+        moe_local_dispatch=args.moe_local_dispatch,
+    )
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = Path(args.out) / args.tag
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            fname = outdir / f"{arch}__{shape_name}__{mesh_name}.json"
+            try:
+                res = lower_cell(arch, shape_name, multi, run)
+                status = res["status"]
+            except Exception as e:
+                res = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": "error", "error": str(e),
+                       "traceback": traceback.format_exc()}
+                status = "error"
+            fname.write_text(json.dumps(res, indent=2))
+            mark = {"ok": "PASS", "skipped": "SKIP", "error": "FAIL"}[status]
+            n_ok += status == "ok"
+            n_fail += status == "error"
+            print(f"{mark} {arch} {shape_name} {mesh_name} "
+                  f"({res.get('t_compile_s', '-')}s compile)", flush=True)
+            if status == "error":
+                print(res.get("error", ""), flush=True)
+    print(f"dry-run: {n_ok} ok, {n_fail} failed -> {outdir}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

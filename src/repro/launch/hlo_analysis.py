@@ -1,0 +1,328 @@
+"""Static analysis of compiled HLO text.
+
+``cost_analysis()`` gives FLOPs and bytes; collective traffic is NOT in it,
+so we parse the HLO text and sum result bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Collectives inside `while` bodies (lax.scan over layers / microbatches /
+KV blocks) execute trip-count times but appear once in the text.  We parse
+each while's condition computation (`compare(iv, constant), direction=LT`)
+to recover trip counts and scale nested computations by the product of
+enclosing trips.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-_]+)\s+\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"\bwhile\(.*?\),\s*condition=%?([\w.\-_]+),\s*body=%?([\w.\-_]+)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CONST_RE = re.compile(r"%?([\w.\-_]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+_CMP_RE = re.compile(r"compare\(([^)]*)\),?.*direction=(LT|LE|GT|GE|NE)")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = _BYTES.get(dtype)
+    if n is None:
+        return 0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def parse_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = {}
+    for ln in cond_lines:
+        for name, val in _CONST_RE.findall(ln):
+            consts[name] = int(val)
+    for ln in cond_lines:
+        m = _CMP_RE.search(ln)
+        if m:
+            args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+            # Strip "name" out of "type[..] %name" operand syntax.
+            names = [a.split()[-1].lstrip("%") for a in args]
+            for nm in names:
+                if nm in consts:
+                    return max(1, consts[nm])
+    # Unknown trip count: count once (conservative).
+    return 1
+
+
+def computation_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """mult[c] = how many times computation c executes per program run."""
+    entry = comps.get("__entry__", [""])[0]
+    # while-call edges: parent -> [(body, trip)]
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            w = _WHILE_RE.search(ln)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                # XLA annotates known trip counts in backend_config; prefer
+                # that, fall back to parsing the condition computation.
+                tm = _TRIP_RE.search(ln)
+                trip = int(tm.group(1)) if tm else _trip_count(comps.get(cond, []))
+                edges.setdefault(name, []).append((body, trip))
+
+    mult: Dict[str, float] = {c: 0.0 for c in comps if c != "__entry__"}
+    if entry in mult:
+        mult[entry] = 1.0
+
+    # Propagate through the (acyclic) while-nesting DAG.
+    changed = True
+    iters = 0
+    while changed and iters < 64:
+        changed = False
+        iters += 1
+        for parent, kids in edges.items():
+            pm = mult.get(parent, 0.0)
+            for body, trip in kids:
+                new = pm * trip
+                if new > mult.get(body, 0.0):
+                    mult[body] = new
+                    changed = True
+    # Computations never reached via while edges (fusions, entry) run once
+    # per reference; we only need while bodies scaled, so default to 1.
+    for c in mult:
+        if mult[c] == 0.0:
+            mult[c] = 1.0
+    return mult
+
+
+def _result_bytes(line: str, op: str) -> int:
+    eq = line.find("=")
+    cut = line.find(op, eq)
+    if eq < 0 or cut < 0:
+        return 0
+    seg = line[eq:cut]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(seg))
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Trip-scaled collective result bytes per device program.
+
+    all-reduce counts 2x (ring = reduce-scatter + all-gather phases); other
+    collectives count their result bytes once.
+    """
+    comps = parse_computations(hlo_text)
+    mult = computation_multipliers(comps)
+
+    stats = {op: 0.0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        scale = mult.get(name, 1.0)
+        for ln in lines:
+            if "=" not in ln:
+                continue
+            for op in _COLLECTIVES:
+                if f" {op}(" in ln or f"{op}-start(" in ln:
+                    b = _result_bytes(ln, op)
+                    factor = 2.0 if op == "all-reduce" else 1.0
+                    stats[op] += b * factor * scale
+                    counts[op] += 1
+                    break
+    out = {f"bytes_{k}": v for k, v in stats.items()}
+    out.update({f"count_{k}": float(counts[k]) for k in counts})
+    out["collective_bytes"] = sum(stats.values())
+    return out
+
+
+def total_while_flops_scale(hlo_text: str) -> float:
+    """Max loop-nesting multiplier — used to sanity-check cost_analysis
+    undercounting of while bodies."""
+    comps = parse_computations(hlo_text)
+    return max(computation_multipliers(comps).values())
+
+
+# ---------------------------------------------------------------------------
+# Trip-scaled FLOP / byte counters.
+#
+# jax's ``compiled.cost_analysis()`` visits every computation exactly once, so
+# anything under a ``lax.scan`` (layers, microbatches, KV blocks) is
+# undercounted by its trip count.  We re-derive both quantities from the HLO
+# text with the while-nesting multipliers applied.
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-_]+)\s*=\s*")
+_OP_RE = re.compile(r"=\s*(?:\([^=]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z][\w\-]*)\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-done",
+    "all-gather-done", "all-reduce-done",
+}
+
+
+def _line_shapes(line: str):
+    return _SHAPE_RE.findall(line)
+
+
+def _build_shape_map(lines) -> Dict[str, Tuple[str, Tuple[int, ...]]]:
+    """name -> (dtype, dims) from definition lines of one computation."""
+    out = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        eq = ln.find("=")
+        shapes = _SHAPE_RE.findall(ln[eq:])
+        if shapes:
+            dt, dims = shapes[0]
+            out[m.group(1)] = (
+                dt, tuple(int(d) for d in dims.split(",") if d)
+            )
+    return out
+
+
+def _fusion_called(comps) -> set:
+    called = set()
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-_]+)", ln):
+                called.add(m.group(1))
+    return called
+
+
+def hlo_dot_flops(hlo_text: str) -> float:
+    """2*M*N*K FLOPs of every dot, scaled by enclosing while trip counts."""
+    comps = parse_computations(hlo_text)
+    mult = computation_multipliers(comps)
+    total = 0.0
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        scale = mult.get(name, 1.0)
+        shape_map = None
+        for ln in lines:
+            if " dot(" not in ln:
+                continue
+            eq = ln.find("=")
+            cut = ln.find(" dot(", eq)
+            if eq < 0 or cut < 0:
+                continue
+            res = _SHAPE_RE.findall(ln[eq:cut])
+            if not res:
+                continue
+            out_elems = 1
+            for d in res[0][1].split(","):
+                if d:
+                    out_elems *= int(d)
+            cm = _CONTRACT_RE.search(ln)
+            cdims = [int(x) for x in cm.group(1).split(",") if x] if cm else []
+            # Resolve lhs operand shape.
+            oper = ln[cut + len(" dot("):]
+            lhs_name = oper.split(",")[0].split(")")[0].strip().lstrip("%")
+            if shape_map is None:
+                shape_map = _build_shape_map(lines)
+            k_elems = 1
+            if lhs_name in shape_map:
+                _, dims = shape_map[lhs_name]
+                for c in cdims:
+                    if c < len(dims):
+                        k_elems *= dims[c]
+            total += 2.0 * out_elems * k_elems * scale
+    return total
+
+
+def hlo_bytes_accessed(hlo_text: str) -> float:
+    """Result+operand bytes of every materializing op, trip-scaled.
+
+    Fusion bodies are excluded (their internals never hit HBM); the fusion op
+    itself counts its operands and result.  This approximates HBM traffic the
+    way XLA's own bytes-accessed metric does, but with loop trip counts.
+    """
+    comps = parse_computations(hlo_text)
+    mult = computation_multipliers(comps)
+    fused = _fusion_called(comps)
+    total = 0.0
+    for name, lines in comps.items():
+        if name == "__entry__" or name in fused:
+            continue
+        scale = mult.get(name, 1.0)
+        shape_map = _build_shape_map(lines)
+        for ln in lines:
+            m = _OP_RE.search(ln)
+            if not m:
+                continue
+            op = m.group(1)
+            if op in _NO_TRAFFIC:
+                continue
+            eq = ln.find("=")
+            cut = ln.find(f" {op}(", eq)
+            if cut < 0:
+                continue
+            res_bytes = sum(
+                _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(ln[eq:cut])
+            )
+            # Operand bytes: resolve %names in the operand list.
+            oper_seg = ln[cut + len(op) + 2:]
+            depth, end = 1, 0
+            for i, ch in enumerate(oper_seg):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            opnd_bytes = 0
+            for nm in re.findall(r"%([\w.\-_]+)", oper_seg[:end]):
+                if nm in shape_map:
+                    dt, dims = shape_map[nm]
+                    b = _BYTES.get(dt, 0)
+                    for d in dims:
+                        b *= d
+                    opnd_bytes += b
+            total += (res_bytes + opnd_bytes) * scale
+    return total
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    out = collective_stats(hlo_text)
+    out["hlo_dot_flops"] = hlo_dot_flops(hlo_text)
+    out["hlo_bytes_accessed"] = hlo_bytes_accessed(hlo_text)
+    return out

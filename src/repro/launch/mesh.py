@@ -1,0 +1,28 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Best-effort mesh over whatever devices exist (CPU tests, examples,
+    elastic restarts after losing hosts: axes re-factored to the live
+    device count)."""
+    n = len(jax.devices())
+    mp = math.gcd(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return f"mesh{dict(mesh.shape)} over {mesh.devices.size} devices"

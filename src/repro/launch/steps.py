@@ -1,0 +1,108 @@
+"""Step builders: training step (grad accumulation + AdamW) and serving
+steps, shared by the real launcher and the dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models.model_api import ModelBundle
+from repro.optim.adamw import OptConfig, apply_updates, init_opt
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: OptConfig,
+                    microbatches: int = 1, mesh=None,
+                    grad_pspecs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Gradient accumulation via ``lax.scan`` over microbatches keeps per-step
+    live activation memory at 1/mb of the global batch — the knob that fits
+    314B-param training cells into 16GB/chip HBM.  The post-reshape sharding
+    constraint is load-bearing: without it GSPMD is free to shard the
+    *microbatch* factor of the (mb, B/mb, ...) reshape and replicate the
+    batch, blowing per-device activation memory up by the data-axis size.
+
+    ``grad_pspecs``: PartitionSpecs (normally the parameter specs) to pin the
+    gradient accumulator to.  Without it GSPMD materializes *replicated*
+    full gradients every microbatch (an all-reduce of the whole grad pytree
+    per µbatch — 18.5 TB/device/step for grok-1): the constraint turns that
+    into per-µbatch reduce-scatters onto the FSDP shards.  §Perf iteration.
+    """
+    loss_fn = bundle.loss
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.sharding.partition import batch_entry, fit_spec
+
+        dp = batch_entry(mesh, bundle.run.sharding)
+
+        def constrain(x):
+            spec = fit_spec(x.shape, [None, dp] + [None] * (x.ndim - 2), mesh)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    else:
+        def constrain(x):
+            return x
+
+    if grad_pspecs is not None and mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def constrain_grads(g):
+            return jax.tree_util.tree_map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, s)),
+                g, grad_pspecs,
+                is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+            )
+    else:
+        def constrain_grads(g):
+            return g
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return constrain(
+                    x.reshape(microbatches, x.shape[0] // microbatches,
+                              *x.shape[1:])
+                )
+
+            mb = jax.tree_util.tree_map(split, batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc(carry, mbatch):
+                tot, g = carry
+                l, gi = jax.value_and_grad(loss_fn)(params, mbatch)
+                g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g, gi
+                )
+                return (tot + l, constrain_grads(g)), None
+
+            (loss, grads), _ = lax.scan(acc, (jnp.zeros(()), g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        params, opt_state, m = apply_updates(opt_cfg, params, opt_state, grads)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    return train_step
+
+
+def opt_struct_and_specs(bundle: ModelBundle, param_pspecs, opt_cfg: OptConfig):
+    """(eval_shape of opt state, matching PartitionSpec pytree)."""
+    from jax.sharding import PartitionSpec as P
+
+    param_struct = bundle.param_struct()
+    opt_struct = jax.eval_shape(partial(init_opt, opt_cfg), param_struct)
+    specs = {"m": param_pspecs, "v": param_pspecs, "count": P()}
+    if "master" in opt_struct:
+        specs["master"] = param_pspecs
+    return opt_struct, specs

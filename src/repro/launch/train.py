@@ -1,0 +1,148 @@
+"""Production train launcher: config-driven, fault-tolerant, resumable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 300 --reduced --seq-len 512 --batch 8 --ckpt runs/quickstart
+
+Single-host CPU runs use the elastic host mesh; on real pods the same code
+runs under ``jax.distributed.initialize`` with ``make_production_mesh``.
+Features: deterministic resumable data, atomic async checkpoints, retry on
+transient step failures, straggler monitoring, optional int8+EF gradient
+compression.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import RunConfig, get_config
+from repro.data.lm_data import LMDataConfig, batch_at
+from repro.distributed.fault_tolerance import (ElasticMesh, Heartbeat,
+                                               StragglerMonitor, retry_step)
+from repro.launch.steps import make_train_step, opt_struct_and_specs
+from repro.models.model_api import build
+from repro.optim.adamw import OptConfig, init_opt
+from repro.sharding.partition import (activation_sharding, batch_pspecs,
+                                      param_pspecs, to_shardings)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--grad-compression", default="",
+                    choices=["", "int8_ef"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    run = RunConfig(remat=args.remat, microbatches=args.microbatches,
+                    grad_compression=args.grad_compression)
+    mesh = ElasticMesh(args.model_parallel).make()
+    print(f"mesh: {dict(mesh.shape)} devices={mesh.devices.size}")
+
+    bundle = build(cfg, run)
+    opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps)
+    data_cfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                            global_batch=args.batch)
+
+    pspecs = param_pspecs(bundle.param_struct(), mesh, run.sharding)
+    param_sh = to_shardings(pspecs, mesh)
+    _, opt_pspecs = opt_struct_and_specs(bundle, pspecs, opt_cfg)
+    opt_sh = to_shardings(opt_pspecs, mesh)
+
+    # Init or restore.
+    start = 0
+    params = jax.jit(bundle.init, out_shardings=param_sh)(
+        jax.random.PRNGKey(0)
+    )
+    opt_state = jax.jit(lambda p: init_opt(opt_cfg, p),
+                        out_shardings=opt_sh)(params)
+    if args.ckpt and ckpt.latest_step(args.ckpt) is not None:
+        (params, opt_state), start = ckpt.restore(
+            args.ckpt, (params, opt_state),
+            shardings=(param_sh, opt_sh),
+        )
+        print(f"restored step {start} from {args.ckpt}")
+
+    with mesh, activation_sharding(mesh):
+        step_fn = make_train_step(bundle, opt_cfg, args.microbatches, mesh)
+        if args.grad_compression == "int8_ef":
+            from repro.distributed.compression import (init_error,
+                                                       make_compressed_dp_grads)
+            from repro.optim.adamw import apply_updates
+
+            grads_fn = make_compressed_dp_grads(bundle.loss, mesh)
+            err = init_error(params)
+
+            def step_fn_c(params, opt_state, err, batch):
+                loss, grads, err = grads_fn(params, err, batch)
+                params, opt_state, m = apply_updates(opt_cfg, params,
+                                                     opt_state, grads)
+                m["loss"] = loss
+                return params, opt_state, err, m
+
+            jstep_c = jax.jit(step_fn_c, donate_argnums=(0, 1, 2))
+        else:
+            jstep = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, opt_sh, None),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+
+        mon = StragglerMonitor()
+        hb = Heartbeat(Path(args.ckpt or "runs") / "heartbeat.json") \
+            if args.ckpt else None
+        losses = []
+        for step in range(start, args.steps):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in batch_at(data_cfg, step).items()}
+            t0 = time.perf_counter()
+            if args.grad_compression == "int8_ef":
+                params, opt_state, err, m = retry_step(
+                    jstep_c, params, opt_state, err, batch
+                )
+            else:
+                params, opt_state, m = retry_step(jstep, params, opt_state,
+                                                  batch)
+            loss = float(m["loss"])
+            dt = time.perf_counter() - t0
+            slow = mon.record(step, dt)
+            losses.append(loss)
+            if hb:
+                hb.beat(step, loss=loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms{' STRAGGLER' if slow else ''})",
+                      flush=True)
+            if args.ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(args.ckpt, step + 1, (params, opt_state))
+        if args.ckpt:
+            ckpt.wait_pending(args.ckpt)
+            ckpt.save(args.ckpt, args.steps, (params, opt_state))
+        print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+              f"steps/s {1.0/max(mon.mean,1e-9):.2f}; {mon.summary()}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

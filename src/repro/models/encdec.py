@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_len, d_model) that feed the
+encoder directly.  Decoder layers: causal self-attention (+cache), cross
+attention over the encoder output (cross K/V cached for decode), GELU MLP.
+Rotary positions replace whisper's learned/sinusoidal embeddings (documented
+TPU-era adaptation in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain_batch
+from repro.models.transformer import _ce, _logits, _remat
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attn(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": L.init_mlp(ks[1], cfg, gated=False),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attn(ks[0], cfg),
+        "lnx": jnp.ones((cfg.d_model,), dt),
+        "xattn": L.init_attn(ks[1], cfg, cross=True),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "mlp": L.init_mlp(ks[2], cfg, gated=False),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    enc_keys = jax.random.split(ke, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(kemb, (cfg.vocab, cfg.d_model)) * 0.02).astype(dt),
+        "enc_blocks": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": (
+            jax.random.normal(kh, (cfg.d_model, cfg.vocab)) / math.sqrt(cfg.d_model)
+        ).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg: ModelConfig, run: RunConfig, frames):
+    """frames: (B, Se, D) precomputed stub embeddings -> (B, Se, D)."""
+    Se = frames.shape[1]
+    positions = jnp.arange(Se)[None, :]
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+
+    def body(x, lp):
+        def fn(lp_, x_):
+            x_ = constrain_batch(x_)
+            h = L.rms_norm(x_, lp_["ln1"], cfg.norm_eps)
+            q, k, v = L._qkv(lp_["attn"], cfg, h, positions)
+            o = L.plain_attention(q, k, v, causal=False)
+            o = jnp.einsum(
+                "bsh,hd->bsd", o.reshape(*o.shape[:2], -1), lp_["attn"]["wo"]
+            )
+            x_ = x_ + o
+            h2 = L.rms_norm(x_, lp_["ln2"], cfg.norm_eps)
+            return x_ + L.mlp_block(lp_["mlp"], h2)
+
+        return _remat(fn, run)(lp, x), None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_layer(lp, cfg, run, x, positions, enc_out):
+    x = constrain_batch(x)
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, (k, v) = L.attn_block(lp["attn"], cfg, run, h, positions)
+    x = x + attn_out
+    hx = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+    xk, xv = L.cross_kv(lp["xattn"], cfg, enc_out)
+    x = x + L.cross_attn_block(lp["xattn"], cfg, hx, xk, xv)
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.mlp_block(lp["mlp"], h2)
+    return x, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+
+def decode_forward(params, cfg: ModelConfig, run: RunConfig, tokens, enc_out,
+                   want_cache: bool = False):
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = params["embed"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+
+    def body(x, lp):
+        fn = _remat(
+            lambda lp_, x_: _dec_layer(lp_, cfg, run, x_, positions, enc_out),
+            run,
+        )
+        x, cache = fn(lp, x)
+        return x, (cache if want_cache else 0)
+
+    x, caches = lax.scan(body, x, params["dec_blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, (caches if want_cache else None)
+
+
+def encdec_loss(params, cfg: ModelConfig, run: RunConfig, tokens, labels,
+                frames):
+    enc_out = encode(params, cfg, run, frames)
+    x, _ = decode_forward(params, cfg, run, tokens, enc_out)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    num, den = _ce(_logits(params, cfg, x), labels_c, mask)
+    return num / jnp.maximum(den, 1.0)
+
+
+def encdec_prefill(params, cfg: ModelConfig, run: RunConfig, tokens, frames,
+                   cache_len=None):
+    enc_out = encode(params, cfg, run, frames)
+    x, caches = decode_forward(params, cfg, run, tokens, enc_out,
+                               want_cache=True)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    cache = dict(caches)
+    S = tokens.shape[1]
+    cap = cache_len or S
+    if cap > S:
+        pad = [(0, 0), (0, 0), (0, cap - S), (0, 0), (0, 0)]
+        cache["k"] = jnp.pad(cache["k"], pad)
+        cache["v"] = jnp.pad(cache["v"], pad)
+    cache["pos"] = jnp.full((), S, jnp.int32)
+    return logits, cache
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    Lr, K, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((Lr, batch, cache_len, K, hd), dt),
+        "v": jnp.zeros((Lr, batch, cache_len, K, hd), dt),
+        "xk": jnp.zeros((Lr, batch, cfg.enc_len, K, hd), dt),
+        "xv": jnp.zeros((Lr, batch, cfg.enc_len, K, hd), dt),
+    }
+
+
+def encdec_decode_step(params, cfg: ModelConfig, run: RunConfig, token, cache):
+    pos = cache["pos"]
+    x = params["embed"].astype(jnp.dtype(cfg.compute_dtype))[token]
+
+    def body(x, inp):
+        lp, lc = inp
+        x = constrain_batch(x)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, k_c, v_c = L.attn_decode_block(
+            lp["attn"], cfg, h, lc["k"], lc["v"], pos
+        )
+        x = x + attn_out
+        hx = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + L.cross_attn_block(lp["xattn"], cfg, hx, lc["xk"], lc["xv"])
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(lp["mlp"], h2)
+        return x, {"k": k_c, "v": v_c, "xk": lc["xk"], "xv": lc["xv"]}
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_caches = lax.scan(body, x, (params["dec_blocks"], layer_caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)[:, 0]
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

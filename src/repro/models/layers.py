@@ -1,0 +1,696 @@
+"""Pure-JAX building blocks shared by every architecture in the pool.
+
+Everything here is a plain function over pytrees of arrays — no framework.
+Design constraints (these matter at dry-run scale: 512 devices, 32k-500k
+sequences, 314B params):
+
+* attention never materializes an (S, S) score matrix for long sequences —
+  ``blocked_causal_attention`` is an online-softmax flash-style formulation
+  with a *static* python loop over query blocks (so causal blocks are simply
+  never computed: no masked-FLOP waste in ``cost_analysis``) and a
+  ``lax.scan`` over key/value blocks (O(bq*bk) live memory);
+* MoE dispatch is scatter/gather with a capacity buffer — never a dense
+  (tokens, experts, capacity) one-hot einsum;
+* the mamba-1 selective scan is chunked: sequential ``lax.scan`` over chunks,
+  ``associative_scan`` within a chunk, so the (S, d_inner, d_state) state
+  tensor is never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.sharding.partition import constrain_batch
+
+# ---------------------------------------------------------------------------
+# Norms / rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B, bq, K, G, hd), k: (B, bk, K, hd) -> (B, K, G, bq, bk) fp32."""
+    return jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def _gqa_out(p, v):
+    """p: (B, K, G, bq, bk) fp32, v: (B, bk, K, hd) -> (B, bq, K, G, hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+
+def plain_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0):
+    """Reference attention for short sequences.  Shapes:
+    q (B, Sq, H, hd), k/v (B, Sk, K, hd).  Materializes (Sq, Sk) scores."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, K, G, hd)
+    s = _gqa_scores(qg, k, scale)  # (B, K, G, Sq, Sk)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def _attend_block(q_blk, kv_blocks, first_kpos, q_pos, window, scale):
+    """Online-softmax over a stack of KV blocks for one query block.
+
+    q_blk: (B, bq, K, G, hd); kv_blocks: (nb, B, bk, K, hd) x2 stacked pytree;
+    q_pos: (bq,) absolute query positions; first_kpos: absolute position of
+    the first key in kv_blocks[0].
+    """
+    ks, vs = kv_blocks
+    nb, B, bk, K, hd = ks.shape
+    G = q_blk.shape[3]
+    bq = q_blk.shape[1]
+
+    m0 = jnp.full((B, K, G, bq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, K, G, bq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, bq, K, G, hd), dtype=jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, blk_idx = inp
+        kpos = first_kpos + blk_idx * bk + jnp.arange(bk)
+        s = _gqa_scores(q_blk, k_blk, scale)  # (B,K,G,bq,bk)
+        mask = q_pos[:, None] >= kpos[None, :]
+        if window:
+            mask &= q_pos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # exp(-inf - -inf) guard: rows that have seen nothing stay zero.
+        corr = jnp.exp(jnp.where(m == -jnp.inf, 0.0, m - m_new))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = _gqa_out(p, v_blk).astype(jnp.float32)
+        corr_o = jnp.moveaxis(corr, -1, 1)[..., None]  # (B,bq,K,G,1)
+        acc_new = acc * corr_o + pv
+        return (m_new, l_new, acc_new), None
+
+    idx = jnp.arange(nb)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (ks, vs, idx))
+    l_o = jnp.moveaxis(l, -1, 1)[..., None]
+    return acc / jnp.maximum(l_o, 1e-30)
+
+
+def blocked_causal_attention(q, k, v, *, window: int = 0, bq: int = 512,
+                             bk: int = 512):
+    """Flash-style causal attention.  q (B,S,H,hd), k/v (B,S,K,hd).
+
+    Static python loop over query blocks -> strictly-upper blocks are never
+    lowered (no wasted FLOPs); ``lax.scan`` over KV blocks inside keeps live
+    memory at O(bq*bk).  Each query block is wrapped in ``jax.checkpoint`` so
+    the backward pass recomputes instead of saving per-step residuals.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    if S <= max(2048, bq):
+        return plain_attention(q, k, v, causal=True, window=window)
+
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = q.shape[1]
+    assert Sp % bq == 0 and Sp % bk == 0
+    nq = Sp // bq
+
+    qg = q.reshape(B, nq, bq, K, G, hd)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def one_q_block(q_blk, ks, vs, i, lo):
+        nb = ks.shape[1] // bk
+        kv = (
+            ks.reshape(B, nb, bk, K, hd).transpose(1, 0, 2, 3, 4),
+            vs.reshape(B, nb, bk, K, hd).transpose(1, 0, 2, 3, 4),
+        )
+        q_pos = i * bq + jnp.arange(bq)
+        return _attend_block(q_blk, kv, lo * bk, q_pos, window, scale)
+
+    outs = []
+    for i in range(nq):
+        hi = ((i + 1) * bq) // bk  # exclusive kv block bound (causal)
+        lo = 0
+        if window:
+            lo = max(0, (i * bq - window + 1) // bk)
+        ks = lax.slice_in_dim(k, lo * bk, hi * bk, axis=1)
+        vs = lax.slice_in_dim(v, lo * bk, hi * bk, axis=1)
+        outs.append(one_q_block(qg[:, i], ks, vs, i, lo))
+    out = jnp.stack(outs, axis=1).reshape(B, Sp, K, G, hd)
+    out = out.reshape(B, Sp, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+def kv_stream_attention(q, k, v, *, window: int = 0, bk: int = 512):
+    """Q-stationary causal attention for sequence-parallel prefill.
+
+    Q keeps its (sharded) full sequence dim so GSPMD partitions every einsum
+    along it; K/V stream block-by-block through a ``lax.scan`` (replicated
+    across the seq shards by ``constrain_kv_gather``).  The masked upper
+    triangle costs ~2x the causal FLOPs, but the sequence axis parallelizes
+    over the otherwise-idle model axis — a large net win for small-batch
+    prefill (§Perf iteration A3).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    pad = (-S) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = k.shape[1] // bk
+    qg = q.reshape(B, S, K, G, hd)
+    q_pos = jnp.arange(S)
+
+    ks = k.reshape(B, nb, bk, K, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nb, bk, K, hd).transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((B, K, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, j = inp
+        kpos = j * bk + jnp.arange(bk)
+        s = _gqa_scores(qg, k_blk, scale)  # (B,K,G,S,bk)
+        mask = q_pos[:, None] >= kpos[None, :]
+        if window:
+            mask &= q_pos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(jnp.where(m == -jnp.inf, 0.0, m - m_new))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * jnp.moveaxis(corr, -1, 1)[..., None] + _gqa_out(
+            p, v_blk).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                              (ks, vs, jnp.arange(nb)))
+    out = acc / jnp.maximum(jnp.moveaxis(l, -1, 1)[..., None], 1e-30)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, S, K, hd); pos: scalar int32 —
+    number of valid entries (for a ring buffer, min(pos, S) are valid).
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, K, G, hd)
+    s = _gqa_scores(qg, k_cache, scale)[..., 0, :]  # (B, K, G, S)
+    valid = jnp.arange(S) < jnp.minimum(pos, S)
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + norms + rope)
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    sc = 1.0 / math.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(ks[0], (D, H * hd)) * sc).astype(dt),
+        "wk": (jax.random.normal(ks[1], (D, K * hd)) * sc).astype(dt),
+        "wv": (jax.random.normal(ks[2], (D, K * hd)) * sc).astype(dt),
+        "wo": (jax.random.normal(ks[3], (H * hd, D)) * (1.0 / math.sqrt(H * hd))).astype(dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions, apply_rope: bool = True):
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if apply_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, cfg: ModelConfig, run: RunConfig, x, positions):
+    """Full-sequence (train/prefill) self-attention.  Returns (out, (k, v))."""
+    from repro.sharding.partition import constrain_kv_gather
+
+    from repro.sharding import partition as _p
+
+    q, k, v = _qkv(p, cfg, x, positions)
+    window = cfg.window if cfg.attn_type == "sliding" else 0
+    if _p._ACT_MESH is not None and _p.seq_entry(_p._ACT_MESH):
+        # Sequence-parallel prefill ('fsdp_seq'): Q keeps its seq shards,
+        # K/V replicate across them once per layer (cheap under GQA), and
+        # the q-stationary kernel partitions along Q's sequence.
+        k = constrain_kv_gather(k)
+        v = constrain_kv_gather(v)
+        o = jax.checkpoint(
+            lambda q_, k_, v_: kv_stream_attention(
+                q_, k_, v_, window=window, bk=run.attn_block_kv),
+            prevent_cse=False,
+        )(q, k, v)
+    else:
+        o = blocked_causal_attention(
+            q, k, v, window=window, bq=run.attn_block_q, bk=run.attn_block_kv
+        )
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+    return out, (k, v)
+
+
+def attn_decode_block(p, cfg: ModelConfig, x, k_cache, v_cache, pos):
+    """One-token self-attention with cache update.  x: (B, 1, D)."""
+    S = k_cache.shape[1]
+    q, k, v = _qkv(p, cfg, x, pos[None] if pos.ndim == 0 else pos)
+    slot = jnp.where(jnp.asarray(S) > 0, pos % S, 0)
+    k_cache = lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    window = cfg.window if cfg.attn_type == "sliding" else 0
+    o = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1), p["wo"])
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_block(p, cfg: ModelConfig, x, k_enc, v_enc):
+    """x: (B, S, D); k_enc/v_enc: (B, Se, K, hd) precomputed from encoder."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    o = plain_attention(q, k_enc, v_enc, causal=False)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def cross_kv(p, cfg: ModelConfig, enc_out):
+    B, Se, D = enc_out.shape
+    K, hd = cfg.kv_heads, cfg.hd
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(B, Se, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(B, Se, K, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for LM archs, GELU for whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, gated: bool = True):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    p = {
+        "w1": (jax.random.normal(ks[0], (D, F)) * sc_in).astype(dt),
+        "w2": (jax.random.normal(ks[1], (F, D)) * sc_out).astype(dt),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(ks[2], (D, F)) * sc_in).astype(dt)
+    return p
+
+
+def mlp_block(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+    if "w3" in p:
+        h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based scatter dispatch; experts TP on Fe, dispatch local)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    sc_in, sc_out = 1.0 / math.sqrt(D), 1.0 / math.sqrt(Fe)
+    return {
+        "router": (jax.random.normal(ks[0], (D, E)) * sc_in).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, D, Fe)) * sc_in).astype(dt),
+        "w3": (jax.random.normal(ks[2], (E, D, Fe)) * sc_in).astype(dt),
+        "w2": (jax.random.normal(ks[3], (E, Fe, D)) * sc_out).astype(dt),
+    }
+
+
+def _moe_dispatch_ffn(p, cfg: ModelConfig, xf):
+    """Capacity dispatch + expert FFN for one token shard.  xf: (T, D)."""
+    T, D = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, K)  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(math.ceil(cfg.capacity_factor * T * K / E)))
+    flat_e = top_e.reshape(-1)  # (T*K,)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - 1  # rank within expert
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)  # E*C = drop slot
+
+    x_rep = jnp.repeat(xf, K, axis=0)  # (T*K, D)
+    buf = jnp.zeros((E * C + 1, D), xf.dtype).at[slot].set(x_rep)
+    h = buf[: E * C].reshape(E, C, D)
+
+    g = jnp.einsum("ecd,edf->ecf", h, p["w1"])
+    u = jnp.einsum("ecd,edf->ecf", h, p["w3"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w2"])
+
+    y_flat = jnp.concatenate([y.reshape(E * C, D), jnp.zeros((1, D), y.dtype)])
+    gathered = y_flat[slot] * (top_p.reshape(-1)[:, None]).astype(y.dtype)
+    out = gathered.reshape(T, K, D).sum(axis=1)
+    return out, aux
+
+
+def moe_block(p, cfg: ModelConfig, x, dense_route: bool = False,
+              local_dispatch: bool = False):
+    """Top-k capacity-dispatched MoE.  x: (B, S, D) -> (out, aux_loss).
+
+    Dispatch is a scatter into an (E*C, D) buffer (capacity C), expert FFNs
+    run as a batched einsum over E with Fe TP-sharded; no (T, E, C) one-hot
+    tensor is ever built, so this is memory-safe at millions of tokens.
+
+    Under a mesh scope the dispatch is DATA-LOCAL: tokens reshape to an
+    explicit (data_shards, T_local, D) layout and the capacity buffer gets a
+    sharded leading dim, so the scatter/gather never crosses data shards —
+    without this, GSPMD all-reduces the global (E, C, D) buffer every layer
+    (18+ TB/device/step on grok-1 train_4k; §Perf iteration B4).
+
+    ``dense_route=True`` (decode path, few tokens): evaluate every expert and
+    combine with routing weights — droppless/exact, trivially cheap at
+    decode token counts.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = constrain_batch(x.reshape(T, D))
+
+    if dense_route:
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = lax.top_k(probs, K)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        g = jnp.einsum("td,edf->tef", xf, p["w1"])
+        u = jnp.einsum("td,edf->tef", xf, p["w3"])
+        y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, p["w2"])
+        w = jnp.zeros((T, E), top_p.dtype)
+        w = w.at[jnp.arange(T)[:, None], top_e].set(top_p)
+        out = jnp.einsum("ted,te->td", y, w.astype(y.dtype))
+        return out.reshape(B, S, D), jnp.zeros((), jnp.float32)
+
+    from repro.sharding import partition as _p
+
+    mesh = _p._ACT_MESH
+    n_shards = 1
+    if local_dispatch and mesh is not None:
+        for a in _p.batch_entry(mesh):
+            n_shards *= mesh.shape[a]
+    if n_shards > 1 and T % n_shards == 0:
+        out, aux = _moe_dispatch_ffn_sharded(p, cfg, xf, n_shards)
+        return out.reshape(B, S, D), aux
+
+    out, aux = _moe_dispatch_ffn(p, cfg, xf)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_dispatch_ffn_sharded(p, cfg: ModelConfig, xf, n_shards: int):
+    """Data-local dispatch: explicit (shards, T_local) layout with a sharding
+    constraint on every materialized intermediate, so the capacity buffer,
+    scatter and gather never leave their data shard (§Perf iteration B5)."""
+    T, D = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+    S_, Tl = n_shards, T // n_shards
+    cb = constrain_batch
+
+    xs = cb(xf.reshape(S_, Tl, D))
+    logits = cb(jnp.einsum("std,de->ste", xs.astype(jnp.float32), p["router"]))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, K)  # (S, Tl, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=1)  # (S, E)
+    ce = jnp.zeros((S_, E), jnp.float32)
+    sidx = jnp.arange(S_)[:, None]
+    ce = ce.at[sidx, top_e.reshape(S_, -1)].add(1.0) / (Tl * K)
+    aux = (E * (me * ce).sum(-1)).mean()
+
+    C = max(1, int(math.ceil(cfg.capacity_factor * Tl * K / E)))
+    flat_e = cb(top_e.reshape(S_, Tl * K))
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=1) - 1  # per-shard expert rank
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C
+    slot = cb(jnp.where(keep, flat_e * C + pos, E * C))  # (S, Tl*K)
+
+    x_rep = cb(jnp.repeat(xs, K, axis=1))  # (S, Tl*K, D)
+    buf = jnp.zeros((S_, E * C + 1, D), xf.dtype)
+    buf = cb(buf.at[sidx, slot].set(x_rep))
+    h = cb(buf[:, : E * C].reshape(S_, E, C, D))
+
+    g = cb(jnp.einsum("secd,edf->secf", h, p["w1"]))
+    u = cb(jnp.einsum("secd,edf->secf", h, p["w3"]))
+    y = cb(jnp.einsum("secf,efd->secd", jax.nn.silu(g) * u, p["w2"]))
+
+    y_flat = jnp.concatenate(
+        [y.reshape(S_, E * C, D), jnp.zeros((S_, 1, D), y.dtype)], axis=1
+    )
+    gathered = cb(y_flat[sidx, slot])  # (S, Tl*K, D)
+    gathered = gathered * top_p.reshape(S_, Tl * K)[..., None].astype(y.dtype)
+    out = cb(gathered.reshape(S_, Tl, K, D).sum(axis=2))
+    return out.reshape(T, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (chunked selective scan)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig):
+    D, Di, N, R, W = cfg.d_model, cfg.inner, cfg.ssm_state, cfg.dtrank, cfg.conv_width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(D)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, 1))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (D, 2 * Di)) * sc).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (W, Di)) * 0.5).astype(dt),
+        "conv_b": jnp.zeros((Di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (Di, R + 2 * N)) / math.sqrt(Di)).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (R, Di)) / math.sqrt(R)).astype(dt),
+        "dt_bias": jnp.full((Di,), -2.0, jnp.float32),
+        "A_log": jnp.log(A),  # fp32, (Di, N)
+        "D_skip": jnp.ones((Di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (Di, D)) / math.sqrt(Di)).astype(dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, Di); w: (W, Di)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _ssm_params(p, cfg: ModelConfig, xc):
+    """xc: (B, S, Di) post-conv.  Returns dt (B,S,Di), Bm/Cm (B,S,N) fp32."""
+    N, R = cfg.ssm_state, cfg.dtrank
+    proj = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"]).astype(jnp.float32)
+    dtr, Bm, Cm = proj[..., :R], proj[..., R : R + N], proj[..., R + N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dtr, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"]
+    )
+    return dt, Bm, Cm
+
+
+def _chunk_scan(dA, dBx, h0):
+    """Associative scan of h_t = dA_t * h_{t-1} + dBx_t within a chunk.
+
+    dA, dBx: (B, c, Di, N) fp32; h0: (B, Di, N).  Returns (h_all, h_last).
+    """
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    cumA, cumB = lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = cumA * h0[:, None] + cumB
+    return h_all, h_all[:, -1]
+
+
+def selective_scan(p, cfg: ModelConfig, xc, z, h0=None):
+    """Chunked mamba-1 scan.  xc/z: (B, S, Di) (post-conv / gate).
+
+    Returns (y (B, S, Di), h_last (B, Di, N)) — never materializes the full
+    (S, Di, N) state tensor (only (chunk, Di, N) per scan step).
+    """
+    B, S, Di = xc.shape
+    N = cfg.ssm_state
+    c = min(cfg.ssm_chunk, S)
+    pad = (-S) % c
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+    Sp = xc.shape[1]
+    nch = Sp // c
+
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)
+    if pad:
+        # Padded steps must be identity updates (dt=0 -> dA=1, dBx=0) so the
+        # carried state h_last equals the state at the true final position.
+        valid = (jnp.arange(Sp) < S)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(p["A_log"])  # (Di, N)
+    xf = xc.astype(jnp.float32)
+
+    dA = jnp.exp(dt[..., None] * A)  # (B, Sp, Di, N)
+    dBx = (dt * xf)[..., None] * Bm[..., None, :]  # (B, Sp, Di, N)
+
+    dA_c = dA.reshape(B, nch, c, Di, N).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(B, nch, c, Di, N).transpose(1, 0, 2, 3, 4)
+    Cm_c = Cm.reshape(B, nch, c, N).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        dA_i, dBx_i, C_i = inp
+        h_all, h_last = _chunk_scan(dA_i, dBx_i, h)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, C_i)
+        return h_last, y
+
+    h_last, ys = lax.scan(chunk_step, h0, (dA_c, dBx_c, Cm_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, Di)[:, :S]
+    y = y + p["D_skip"] * xf[:, :S]
+    y = y * jax.nn.silu(z[:, :S].astype(jnp.float32))
+    return y.astype(xc.dtype), h_last
+
+
+def mamba_block(p, cfg: ModelConfig, x, state=None):
+    """Full-sequence mamba-1 block.  x: (B, S, D) -> (out, (conv_tail, h))."""
+    B, S, D = x.shape
+    Di, W = cfg.inner, cfg.conv_width
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :Di], xz[..., Di:]
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    y, h_last = selective_scan(p, cfg, xc, z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    conv_tail = xi[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        xi, ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    return out, (conv_tail, h_last)
+
+
+def mamba_decode_block(p, cfg: ModelConfig, x, conv_state, h):
+    """One-token mamba step.  x: (B, 1, D); conv_state: (B, W-1, Di);
+    h: (B, Di, N).  Returns (out, conv_state, h)."""
+    B = x.shape[0]
+    Di, N, W = cfg.inner, cfg.ssm_state, cfg.conv_width
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :Di], xz[..., Di:]  # (B, 1, Di)
+    window = jnp.concatenate([conv_state, xi], axis=1)  # (B, W, Di)
+    xc = jax.nn.silu(
+        jnp.einsum("bwd,wd->bd", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)  # (B, Di, N)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]) + p["D_skip"] * xc[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", y.astype(x.dtype), p["out_proj"])[:, None, :]
+    return out, window[:, 1:], h

@@ -1,0 +1,154 @@
+"""Facade tying configs -> model functions -> input/cache specs.
+
+Everything the launcher, dry-run, tests and benchmarks need goes through
+``build(cfg, run)``; no caller touches family-specific modules directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import dlrm as D
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    run: RunConfig
+    init: Callable[[Any], Any]
+    loss: Callable[..., Any]  # loss(params, batch) -> scalar
+    prefill: Optional[Callable[..., Any]]  # prefill(params, batch) -> out
+    decode: Optional[Callable[..., Any]]  # decode(params, token, cache)
+
+    # ---------------- structure helpers ----------------
+    def param_struct(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def n_params(self) -> int:
+        import math
+
+        return sum(
+            math.prod(l.shape) if l.shape else 1
+            for l in jax.tree_util.tree_leaves(self.param_struct())
+        )
+
+    def n_active_params(self) -> int:
+        """MoE: experts count at top_k/E; everything else fully."""
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params()
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+            self.param_struct()
+        )[0]:
+            names = [str(getattr(k, "key", "")) for k in path]
+            n = 1
+            for s in leaf.shape:
+                n *= s
+            if "moe" in names and names[-1] != "router":
+                n = int(n * cfg.top_k / cfg.n_experts)
+            total += n
+        return total
+
+    def batch_struct(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B = shape.global_batch
+        if cfg.family == "dlrm":
+            d = {
+                "dense": jax.ShapeDtypeStruct((B, cfg.dense_features), jnp.float32),
+                "sparse": jax.ShapeDtypeStruct(
+                    (B, cfg.n_tables, cfg.multi_hot), jnp.int32
+                ),
+            }
+            if shape.kind == "train":
+                d["label"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+            return d
+        S = shape.seq_len
+        ct = jnp.dtype(cfg.compute_dtype)
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        d = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend == "vision":
+            d["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), ct
+            )
+        elif cfg.frontend == "audio":
+            d["frontend"] = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), ct)
+        return d
+
+    def cache_struct(self, shape: ShapeConfig):
+        cfg = self.cfg
+        if cfg.family == "dlrm":
+            return None
+        fn = (
+            partial(ED.init_encdec_cache, cfg)
+            if cfg.enc_dec
+            else partial(T.init_cache, cfg)
+        )
+        return jax.eval_shape(
+            lambda: fn(shape.global_batch, shape.seq_len)
+        )
+
+
+def build(cfg: ModelConfig, run: Optional[RunConfig] = None) -> ModelBundle:
+    run = run or RunConfig()
+
+    if cfg.family == "dlrm":
+        def loss(params, batch):
+            return D.dlrm_loss(params, cfg, batch["dense"], batch["sparse"],
+                               batch["label"], run.dlrm_sharded_lookup)
+
+        def serve(params, batch):
+            return D.dlrm_forward(params, cfg, batch["dense"],
+                                  batch["sparse"], run.dlrm_sharded_lookup)
+
+        return ModelBundle(
+            cfg=cfg, run=run,
+            init=partial(D.init_dlrm, cfg=cfg),
+            loss=loss, prefill=serve, decode=None,
+        )
+
+    if cfg.enc_dec:
+        def loss(params, batch):
+            return ED.encdec_loss(params, cfg, run, batch["tokens"],
+                                  batch["labels"], batch["frontend"])
+
+        def prefill_fn(params, batch, cache_len=None):
+            return ED.encdec_prefill(params, cfg, run, batch["tokens"],
+                                     batch["frontend"], cache_len)
+
+        def decode_fn(params, token, cache):
+            return ED.encdec_decode_step(params, cfg, run, token, cache)
+
+        return ModelBundle(
+            cfg=cfg, run=run,
+            init=partial(ED.init_encdec, cfg=cfg),
+            loss=loss, prefill=prefill_fn, decode=decode_fn,
+        )
+
+    def loss(params, batch):
+        return T.lm_loss(params, cfg, run, batch["tokens"], batch["labels"],
+                         batch.get("frontend"))
+
+    def prefill_fn(params, batch, cache_len=None):
+        return T.prefill(params, cfg, run, batch["tokens"],
+                         batch.get("frontend"), cache_len)
+
+    def decode_fn(params, token, cache):
+        return T.decode_step(params, cfg, run, token, cache)
+
+    return ModelBundle(
+        cfg=cfg, run=run,
+        init=partial(T.init_lm, cfg=cfg),
+        loss=loss, prefill=prefill_fn, decode=decode_fn,
+    )

@@ -1,0 +1,315 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are stacked on a leading L dim and iterated with ``lax.scan`` so the
+HLO (and compile time) is O(1) in depth; remat policy wraps the per-layer
+body.  Three entry points:
+
+  * ``lm_loss``     — training forward (causal CE), microbatch-friendly;
+  * ``prefill``     — full-sequence forward returning last-token logits + cache;
+  * ``decode_step`` — one token in, one token of logits out, cache updated.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.sharding.partition import constrain_batch
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    fam = cfg.family
+    if fam == "ssm":
+        p["ssm"] = L.init_mamba(ks[0], cfg)
+        return p
+    p["ln2"] = jnp.ones((cfg.d_model,), dt)
+    p["attn"] = L.init_attn(ks[0], cfg)
+    if fam == "hybrid":
+        p["ssm"] = L.init_mamba(ks[1], cfg)
+    if cfg.n_experts:
+        p["moe"] = L.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg, gated=True)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig):
+    kx, ke, kh = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(kx, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_layer(k, cfg))(keys)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model)) * 0.02).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(kh, (cfg.d_model, cfg.vocab))
+            / math.sqrt(cfg.d_model)
+        ).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(lp, cfg: ModelConfig, run: RunConfig, x, positions):
+    """Full-sequence layer.  Returns (x, aux_loss, kv_for_cache_or_None)."""
+    x = constrain_batch(x)
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam == "ssm":
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, (conv_tail, h_last) = L.mamba_block(lp["ssm"], cfg, h)
+        return x + out, aux, {"conv": conv_tail, "h": h_last}
+
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, (k, v) = L.attn_block(lp["attn"], cfg, run, h, positions)
+    cache = {"k": k, "v": v}
+    if fam == "hybrid":
+        ssm_out, (conv_tail, h_last) = L.mamba_block(lp["ssm"], cfg, h)
+        attn_out = (attn_out + ssm_out) * 0.5
+        cache.update(conv=conv_tail, h=h_last)
+    x = x + attn_out
+
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ff, aux = L.moe_block(lp["moe"], cfg, h2,
+                              local_dispatch=run.moe_local_dispatch)
+    else:
+        ff = L.mlp_block(lp["mlp"], h2)
+    return x + ff, aux, cache
+
+
+def _layer_decode(lp, cfg: ModelConfig, x, cache, pos):
+    """One-token layer.  cache: dict of this layer's state arrays."""
+    x = constrain_batch(x)
+    fam = cfg.family
+    new_cache = {}
+    if fam == "ssm":
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, conv_state, hs = L.mamba_decode_block(
+            lp["ssm"], cfg, h, cache["conv"], cache["h"]
+        )
+        return x + out, {"conv": conv_state, "h": hs}
+
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, k_c, v_c = L.attn_decode_block(
+        lp["attn"], cfg, h, cache["k"], cache["v"], pos
+    )
+    new_cache.update(k=k_c, v=v_c)
+    if fam == "hybrid":
+        ssm_out, conv_state, hs = L.mamba_decode_block(
+            lp["ssm"], cfg, h, cache["conv"], cache["h"]
+        )
+        attn_out = (attn_out + ssm_out) * 0.5
+        new_cache.update(conv=conv_state, h=hs)
+    x = x + attn_out
+
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ff, _ = L.moe_block(lp["moe"], cfg, h2, dense_route=True)
+    else:
+        ff = L.mlp_block(lp["mlp"], h2)
+    return x + ff, new_cache
+
+
+def _remat(fn, run: RunConfig):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens, frontend_embeds=None):
+    x = params["embed"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+    x = constrain_batch(x)
+    if frontend_embeds is not None and cfg.n_frontend_tokens:
+        fe = frontend_embeds.astype(x.dtype)
+        x = lax.dynamic_update_slice(x, fe, (0, 0, 0))
+    return x
+
+
+def backbone(params, cfg: ModelConfig, run: RunConfig, x, positions,
+             want_cache: bool = False):
+    """Scan over layers.  Returns (x_final_normed, aux_loss, cache|None)."""
+
+    def body(carry, lp):
+        x, aux = carry
+        fn = _remat(
+            lambda lp_, x_: _layer_forward(lp_, cfg, run, x_, positions), run
+        )
+        x, a, cache = fn(lp, x)
+        return (x, aux + a), (cache if want_cache else 0)
+
+    (x, aux), caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / max(cfg.n_layers, 1), (caches if want_cache else None)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return jnp.einsum(
+        "bsd,dv->bsv", x, head.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def _ce(logits, labels, mask):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def lm_loss(params, cfg: ModelConfig, run: RunConfig, tokens, labels,
+            frontend_embeds=None):
+    """Causal LM loss.  tokens/labels: (B, S) int32; labels < 0 masked."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = _embed(params, cfg, tokens, frontend_embeds)
+    x, aux, _ = backbone(params, cfg, run, x, positions)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+
+    if run.logits_chunk and S > run.logits_chunk and S % run.logits_chunk == 0:
+        nch = S // run.logits_chunk
+        xs = x.reshape(B, nch, run.logits_chunk, -1).transpose(1, 0, 2, 3)
+        ls = labels_c.reshape(B, nch, -1).transpose(1, 0, 2)
+        ms = mask.reshape(B, nch, -1).transpose(1, 0, 2)
+
+        def chunk(carry, inp):
+            xs_, ls_, ms_ = inp
+            n, d = _ce(_logits(params, cfg, xs_), ls_, ms_)
+            return (carry[0] + n, carry[1] + d), None
+
+        (num, den), _ = lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls, ms))
+    else:
+        num, den = _ce(_logits(params, cfg, x), labels_c, mask)
+
+    loss = num / jnp.maximum(den, 1.0)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=None):
+    """Zeroed decode cache sized for ``cache_len`` context."""
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    Lr, K, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    fam = cfg.family
+    if fam != "ssm":
+        eff = min(cache_len, cfg.window) if cfg.attn_type == "sliding" else cache_len
+        cache["k"] = jnp.zeros((Lr, batch, eff, K, hd), dt)
+        cache["v"] = jnp.zeros((Lr, batch, eff, K, hd), dt)
+    if fam in ("ssm", "hybrid"):
+        Di = cfg.inner
+        cache["conv"] = jnp.zeros((Lr, batch, cfg.conv_width - 1, Di), dt)
+        cache["h"] = jnp.zeros((Lr, batch, Di, cfg.ssm_state), jnp.float32)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, run: RunConfig, tokens,
+            frontend_embeds=None, cache_len: Optional[int] = None):
+    """Full forward; returns (last-token logits (B, V), cache at pos=S).
+
+    ``cache_len`` sets KV-cache *capacity* (>= S) so subsequent decode steps
+    have room; the cache is a ring buffer (slot = pos % capacity), so a full
+    cache degrades to a sliding window rather than corrupting slot 0.
+    """
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = _embed(params, cfg, tokens, frontend_embeds)
+    x, _, caches = backbone(params, cfg, run, x, positions, want_cache=True)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+
+    cache = {"pos": jnp.full((), S, jnp.int32)}
+    if "k" in caches:
+        k, v = caches["k"], caches["v"]  # (L, B, S, K, hd)
+        cap = cache_len or S
+        if cfg.attn_type == "sliding":
+            cap = min(cap, cfg.window)
+        if S > cap:
+            # Keep the last `cap` keys, rotated so slot = pos % cap.
+            k = jnp.roll(k[:, :, S - cap:], S % cap, axis=2)
+            v = jnp.roll(v[:, :, S - cap:], S % cap, axis=2)
+        elif cap > S:
+            pad = [(0, 0), (0, 0), (0, cap - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        cache["k"], cache["v"] = k, v
+    if "conv" in caches:
+        cache["conv"], cache["h"] = caches["conv"], caches["h"]
+    return logits, cache
+
+
+def decode_step_embeds(params, cfg: ModelConfig, run: RunConfig, x, cache):
+    """Decode from precomputed token embeddings x: (B, 1, D).
+
+    This is the tiered-vocab serving entry point: the embedding row comes
+    from the RecMG-managed fast-tier buffer (repro/core/tiered.py) instead
+    of the resident table — the paper's technique applied to an LM's vocab
+    embedding (DESIGN.md §4)."""
+    return _decode_from(params, cfg, run, constrain_batch(x), cache)
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, token, cache):
+    """token: (B, 1) int32.  Returns (logits (B, V), new cache)."""
+    return _decode_from(params, cfg, run, _embed(params, cfg, token), cache)
+
+
+def _decode_from(params, cfg: ModelConfig, run: RunConfig, x, cache):
+    pos = cache["pos"]
+
+    def body(x, inp):
+        lp, lc = inp
+        x, new_c = _layer_decode(lp, cfg, x, lc, pos)
+        return x, new_c
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_caches = lax.scan(body, x, (params["blocks"], layer_caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)[:, 0]
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

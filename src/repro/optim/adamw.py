@@ -1,0 +1,107 @@
+"""AdamW / SGD + global-norm clipping + schedules, in pure JAX.
+
+Moments live in a configurable dtype (fp32 default; bf16 is a memory knob the
+perf loop can flip).  The update math runs in fp32 and casts back to the
+parameter dtype, so bf16 params train stably without a separate master copy
+(documented trade-off; flip ``master_fp32=True`` to keep one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+    master_fp32: bool = False
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt(cfg: OptConfig, params):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt), params)
+    state = {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, dt), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params
+        )
+    return state
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def apply_updates(cfg: OptConfig, params, opt_state, grads):
+    """One AdamW step.  Returns (params, opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = schedule(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    base = opt_state.get("master", params)
+
+    def upd(p, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        p_new = p32 - lr * step
+        return p_new, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(base)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_g = treedef.flatten_up_to(grads)
+    new = [upd(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    new_p32 = treedef.unflatten([t[0] for t in new])
+    new_m = treedef.unflatten([t[1] for t in new])
+    new_v = treedef.unflatten([t[2] for t in new])
+
+    tgt = jax.tree_util.tree_map(lambda old, n: n.astype(old.dtype), params,
+                                 new_p32)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if "master" in opt_state:
+        new_state["master"] = new_p32
+    return tgt, new_state, {"grad_norm": gnorm, "lr": lr}

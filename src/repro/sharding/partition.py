@@ -1,0 +1,281 @@
+"""Partitioning rules: logical intents -> physical PartitionSpecs.
+
+Strategy (FSDP x TP, "fsdp_tp"):
+  * every >=2D parameter shards its feature-out dim on ``model`` (tensor
+    parallel) and one other large dim on the data axes (``("pod","data")``
+    multi-pod, ``("data",)`` single-pod) — that is FSDP/ZeRO-3: weights are
+    gathered per layer inside the ``lax.scan`` over layers;
+  * the stacked layer dim (leading L under ``blocks``) is never sharded;
+  * any assignment whose dim is not divisible by the mesh-axis product is
+    dropped (progressively, for tuple assignments), so odd head counts
+    (15H smollm) or 1500-frame caches still lower — they just replicate.
+
+Variants: "tp" (no FSDP), "dp" (pure data parallel) — perf-loop knobs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+STACKED_KEYS = ("blocks", "enc_blocks", "dec_blocks")
+
+# ---------------------------------------------------------------------------
+# Activation sharding context.
+#
+# Model code calls ``constrain_batch(x)`` at layer boundaries; under an
+# ``activation_sharding(mesh)`` scope this pins the batch dim to the data
+# axes (otherwise GSPMD is free to drift to feature-sharded/batch-replicated
+# layouts once it passes through ops whose dims don't divide the mesh — at
+# 512 devices that costs 16-32x activation memory).  Outside the scope (CPU
+# tests, examples) it is a no-op.
+# ---------------------------------------------------------------------------
+
+_ACT_MESH = None
+_ACT_VARIANT = "fsdp_tp"
+
+
+class activation_sharding:
+    def __init__(self, mesh, variant: str = "fsdp_tp"):
+        self.mesh = mesh
+        self.variant = variant
+
+    def __enter__(self):
+        global _ACT_MESH, _ACT_VARIANT
+        self._prev = (_ACT_MESH, _ACT_VARIANT)
+        _ACT_MESH = self.mesh
+        _ACT_VARIANT = self.variant
+        return self
+
+    def __exit__(self, *exc):
+        global _ACT_MESH, _ACT_VARIANT
+        _ACT_MESH, _ACT_VARIANT = self._prev
+        return False
+
+
+def batch_entry(mesh, variant: Optional[str] = None):
+    """Axes the batch dim of activations/inputs shards over."""
+    variant = variant or _ACT_VARIANT
+    dp = data_axes(mesh)
+    if variant == "fsdp":
+        return dp + ("model",)  # no TP: every axis is data-parallel
+    return dp
+
+
+def seq_entry(mesh, variant: Optional[str] = None):
+    """Axes the sequence dim of activations shards over (sequence
+    parallelism for small-batch prefill: 'fsdp_seq')."""
+    variant = variant or _ACT_VARIANT
+    return ("model",) if variant == "fsdp_seq" else None
+
+
+def constrain_kv_gather(x, batch_dim: int = 0):
+    """Under 'fsdp_seq': pin K/V to be sequence-REPLICATED (batch-sharded
+    only), so attention gathers each layer's K/V once (cheap under GQA)
+    while Q stays sequence-sharded and the score einsum partitions along
+    Q's shards.  No-op outside the seq variant."""
+    mesh = _ACT_MESH
+    if mesh is None or not seq_entry(mesh):
+        return x
+    entries = [None] * x.ndim
+    entries[batch_dim] = batch_entry(mesh)
+    spec = fit_spec(x.shape, entries, mesh)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    be = batch_entry(mesh)
+    if not be:
+        return x
+    entries = [None] * x.ndim
+    entries[batch_dim] = be
+    se = seq_entry(mesh)
+    if se and x.ndim >= 3 and batch_dim == 0:
+        entries[1] = se  # (B, S, ...) activations: shard S too
+    if se and x.ndim == 2 and batch_dim == 0:
+        # Flattened (B*S, D) token tables (MoE dispatch): combined axes.
+        entries[0] = tuple(be) + tuple(se)
+    spec = fit_spec(x.shape, entries, mesh)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        # Inside shard_map the mesh axes are manual: per-shard code is
+        # already sharded by construction — the constraint is a no-op.
+        return x
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(shape, entries, mesh: Mesh) -> P:
+    """Drop (progressively) axis assignments that don't divide the dim."""
+    out = []
+    for dim, ent in enumerate(entries):
+        if ent is None or dim >= len(shape):
+            out.append(None)
+            continue
+        cand = (ent,) if isinstance(ent, str) else tuple(ent)
+        while cand and shape[dim] % _axis_size(mesh, cand) != 0:
+            cand = cand[:-1]
+        if not cand:
+            out.append(None)
+        elif len(cand) == 1:
+            out.append(cand[0])
+        else:
+            out.append(cand)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# (model_dim, fsdp_dim) for each named parameter, relative to the UNSTACKED
+# tensor.  Parent-qualified names ("moe/w1") take precedence.
+_RULES = {
+    "embed": (0, 1),
+    "lm_head": (1, 0),
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0), "wo": (0, 1),
+    "bq": (0, None), "bk": (0, None), "bv": (0, None),
+    "w1": (1, 0), "w3": (1, 0), "w2": (0, 1),
+    "router": (None, 0),
+    "moe/w1": (2, 1), "moe/w3": (2, 1), "moe/w2": (1, 2),
+    "in_proj": (1, 0),
+    "conv_w": (1, None), "conv_b": (0, None),
+    "x_proj": (0, None), "dt_proj": (1, None), "dt_bias": (0, None),
+    "A_log": (0, None), "D_skip": (0, None),
+    "out_proj": (0, 1),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return tuple(names)
+
+
+def param_pspecs(param_struct, mesh: Mesh, sharding: str = "fsdp_tp",
+                 emb_rows: str = "all"):
+    """PartitionSpec pytree for a parameter pytree (of ShapeDtypeStructs).
+
+    Variants: fsdp_tp (default), tp (no FSDP), dp (replicated params),
+    fsdp / fsdp_seq (params FSDP-sharded over every axis, no TP).
+    ``emb_rows``: "all" shards DLRM EMB rows over every axis; "model" keeps
+    them on the model axis only (each data replica owns a full row shard —
+    enables pool-before-reduce lookups; see models/dlrm.py).
+    """
+    dp = data_axes(mesh)
+    use_tp = sharding in ("fsdp_tp", "tp") and "model" in mesh.axis_names
+    use_fsdp = sharding == "fsdp_tp"
+    fsdp_all = sharding in ("fsdp", "fsdp_seq")
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        parent = names[-2] if len(names) >= 2 else ""
+        stacked = any(k in names for k in STACKED_KEYS)
+        shape = leaf.shape
+
+        if name == "emb" and len(shape) == 3:  # DLRM EMBs: row-sharded
+            axes = ("model",) if emb_rows == "model" else dp + ("model",)
+            return fit_spec(shape, [None, axes, None], mesh)
+
+        rule = _RULES.get(f"{parent}/{name}") or _RULES.get(name)
+        if rule is None or len(shape) < (2 if not stacked else 2):
+            # norms, biases without rules, scalars: replicate (but strip the
+            # stacked dim consideration — replication is always valid).
+            return P()
+        model_dim, fsdp_dim = rule
+        off = 1 if stacked else 0
+        entries = [None] * len(shape)
+        if fsdp_all:
+            # Pure FSDP: shard the largest rule dim over every mesh axis.
+            cands = [d for d in (model_dim, fsdp_dim)
+                     if d is not None and d + off < len(shape)]
+            if cands:
+                d = max(cands, key=lambda dd: shape[dd + off])
+                entries[d + off] = dp + ("model",)
+            return fit_spec(shape, entries, mesh)
+        if use_tp and model_dim is not None and model_dim + off < len(shape):
+            entries[model_dim + off] = "model"
+        if use_fsdp and dp and fsdp_dim is not None and fsdp_dim + off < len(shape):
+            entries[fsdp_dim + off] = dp
+        return fit_spec(shape, entries, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, param_struct)
+
+
+def batch_pspecs(batch_struct, mesh: Mesh, sharding: str = "fsdp_tp"):
+    """Shard dim 0 (global batch) of every batch leaf on the data axes
+    (plus seq dim on model for the 'fsdp_seq' variant)."""
+    be = batch_entry(mesh, sharding)
+    se = seq_entry(mesh, sharding)
+
+    def spec_for(leaf):
+        if not leaf.shape:
+            return P()
+        entries = [be] + [None] * (len(leaf.shape) - 1)
+        if se and len(leaf.shape) >= 2:
+            entries[1] = se
+        return fit_spec(leaf.shape, entries, mesh)
+
+    return jax.tree_util.tree_map(spec_for, batch_struct)
+
+
+def cache_pspecs(cache_struct, mesh: Mesh, shard_kv_seq: bool = True):
+    """Decode-cache shardings.
+
+    k/v (L, B, S, K, hd): batch on data; the cache length S on ``model`` when
+    ``shard_kv_seq`` (GSPMD reduces the softmax across the sharded length),
+    else KV heads on ``model`` when divisible.  SSM state (L, B, Di, N) and
+    conv state (L, B, W, Di) shard Di on ``model``.
+    """
+    dp = data_axes(mesh)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name == "pos" or not shape:
+            return P()
+        if name in ("k", "v", "xk", "xv"):
+            if shard_kv_seq:
+                return fit_spec(shape, [None, dp, "model", None, None], mesh)
+            return fit_spec(shape, [None, dp, None, "model", None], mesh)
+        if name == "conv":
+            return fit_spec(shape, [None, dp, None, "model"], mesh)
+        if name == "h":
+            return fit_spec(shape, [None, dp, "model", None], mesh)
+        return fit_spec(shape, [None, dp], mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_struct)
+
+
+def to_shardings(pspecs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

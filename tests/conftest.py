@@ -1,0 +1,25 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests see the real device count (1 CPU device); ONLY the dry-run sets the
+# 512-device flag, inside its own process.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_trace():
+    from repro.core.trace import TraceGenConfig, generate_trace
+
+    return generate_trace(
+        TraceGenConfig(n_tables=8, rows_per_table=2000, n_accesses=30_000,
+                       seed=0, drift_every=10**9)
+    )

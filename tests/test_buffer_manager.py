@@ -1,0 +1,62 @@
+"""RecMG buffer (Algorithms 1 & 2): the O(log n) epoch-trick implementation
+must make the same victim choices as the literal O(capacity) transcription."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.buffer_manager import RecMGBuffer, SlowRecMGBuffer
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 25), st.integers(0, 1), st.integers(0, 1)),
+        min_size=5, max_size=200,
+    ),
+    cap=st.integers(2, 8),
+)
+def test_fast_matches_slow(ops, cap):
+    fast = RecMGBuffer(cap, eviction_speed=4)
+    slow = SlowRecMGBuffer(cap, eviction_speed=4, clamp=False)
+    for key, bit, is_prefetch in ops:
+        if is_prefetch:
+            fast.load_embeddings([], [], [key])
+            slow.load_embeddings([], [], [key])
+        else:
+            fast.load_embeddings([key], [bit], [])
+            slow.load_embeddings([key], [bit], [])
+        assert set(fast.score) == set(slow.priority)
+
+
+def test_algorithm1_priorities():
+    buf = RecMGBuffer(10, eviction_speed=4)
+    buf.load_embeddings([1, 2], [1, 0], [3])
+    # keep -> eviction_speed, evict -> 0 (RRIP class separation); prefetched
+    # entries enter at eviction_speed.
+    assert buf.score[1] - buf.epoch == 4
+    assert buf.score[2] - buf.epoch == 0
+    assert buf.score[3] - buf.epoch == 4
+
+
+def test_paper_literal_priorities():
+    buf = RecMGBuffer(10, eviction_speed=4)
+    buf.load_embeddings([1, 2], [1, 0], [], scaled_bits=False)
+    assert buf.score[1] - buf.epoch == 5
+    assert buf.score[2] - buf.epoch == 4
+
+
+def test_eviction_prefers_low_priority():
+    buf = RecMGBuffer(2, eviction_speed=4)
+    buf.load_embeddings([1], [1], [])  # priority 5
+    buf.load_embeddings([2], [0], [])  # priority 4
+    buf.load_embeddings([3], [1], [])  # full -> evict key 2
+    assert buf.contains(1) and buf.contains(3) and not buf.contains(2)
+
+
+def test_age_on_demand_eviction():
+    buf = RecMGBuffer(3, eviction_speed=2)
+    buf.load_embeddings([1], [1], [])
+    assert buf.populate() == 1  # ages until the sole entry reaches 0
+    assert len(buf) == 0
+    assert buf.populate() is None

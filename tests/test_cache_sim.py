@@ -1,0 +1,68 @@
+"""Cache-policy simulators: behavioral invariants + the Fig.14 attribution
+bookkeeping of the unified `simulate` driver."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.belady import belady_sim
+from repro.core.cache_sim import (FALRU, POLICIES, SimResult, make_cache,
+                                  simulate)
+from repro.core.prefetchers import Prefetcher
+
+
+def test_lru_basic():
+    c = FALRU(2)
+    assert not c.access(1)
+    assert not c.access(2)
+    assert c.access(1)
+    assert not c.access(3)  # evicts 2
+    assert not c.access(2)
+    assert c.access(3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    keys=st.lists(st.integers(0, 30), min_size=20, max_size=300),
+    cap=st.integers(2, 16),
+)
+def test_policies_bounded_and_opt_dominates(keys, cap):
+    keys = np.array(keys)
+    opt_hits, _ = belady_sim(keys, cap)
+    for name in POLICIES:
+        res = simulate(keys, make_cache(name, cap))
+        assert 0 <= res.hits <= len(keys)
+        assert res.hits + res.on_demand == len(keys)
+        assert res.hits <= opt_hits.sum(), name
+
+
+def test_repeated_single_key_all_hit():
+    keys = np.array([5] * 100)
+    for name in POLICIES:
+        res = simulate(keys, make_cache(name, 4))
+        assert res.hits == 99, name
+
+
+class _AlwaysNext(Prefetcher):
+    """Oracle-ish: prefetches key+1 (matches an ascending stream)."""
+
+    def on_access(self, key, hit):
+        return [key + 1]
+
+
+def test_prefetch_attribution():
+    keys = np.arange(100)
+    res = simulate(keys, FALRU(10), _AlwaysNext())
+    # Every access after the first should be a prefetch hit.
+    assert res.prefetch_hits >= 90
+    assert res.prefetch_issued >= 90
+    assert res.prefetch_accuracy > 0.9
+    assert res.hits == res.prefetch_hits + res.cache_hits
+
+
+def test_belady_cache_replay():
+    keys = np.array([1, 2, 1, 3, 1, 2])
+    bc = make_cache("belady", 2, keys)
+    hits = [bc.access(int(k)) for k in keys]
+    ref, _ = belady_sim(keys, 2)
+    assert hits == list(ref)

@@ -1,0 +1,65 @@
+"""Checkpoint: atomic save/restore, async writer, retention, resume."""
+import json
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 4), x), "b": [jnp.full((2,), 2 * x),
+                                            jnp.asarray(3 * x)]}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 7, _tree(1.5))
+    tree, step = ck.restore(d, _tree(0.0))
+    assert step == 7
+    np.testing.assert_allclose(tree["a"], 1.5)
+    np.testing.assert_allclose(tree["b"][1], 4.5)
+
+
+def test_latest_and_retention(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        ck.save(d, s, _tree(float(s)), keep=2)
+    assert ck.latest_step(d) == 5
+    kept = sorted(p.name for p in Path(d).glob("step_*"))
+    assert len(kept) == 2
+
+
+def test_async_save(tmp_path):
+    d = str(tmp_path)
+    t = ck.save_async(d, 11, _tree(2.0))
+    ck.wait_pending(d)
+    assert ck.latest_step(d) == 11
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 3, _tree())
+    assert not list(Path(d).glob("*.tmp"))
+    manifest = json.loads((Path(d) / "step_00000003" / "manifest.json").read_text())
+    assert manifest["step"] == 3 and manifest["n_leaves"] == 3
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path / "nope"), _tree())
+
+
+def test_restore_with_shardings(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 1, _tree(4.0))
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), _tree())
+    tree, _ = ck.restore(d, _tree(), shardings=sh)
+    np.testing.assert_allclose(tree["a"], 4.0)

@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles, swept over shapes/dtypes in
+interpret mode (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.chamfer_kernel import chamfer
+from repro.kernels.embedding_gather import gather_pool
+from repro.kernels.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("N,D,B,P", [
+    (256, 128, 8, 4),
+    (1000, 128, 16, 7),
+    (512, 256, 4, 1),
+    (64, 128, 32, 20),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_pool(N, D, B, P, dtype):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (N, D), dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, N)
+    out = gather_pool(table, idx, interpret=True)
+    want = ref.gather_pool_ref(table, idx)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,P,W,F,block", [
+    (64, 5, 15, 25, 32),
+    (100, 5, 15, 25, 64),  # ragged batch vs block
+    (16, 3, 9, 8, 16),
+    (257, 7, 21, 16, 128),
+])
+def test_chamfer_kernel(B, P, W, F, block):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    po = jax.random.normal(k1, (B, P, F))
+    w = jax.random.normal(k2, (B, W, F))
+    out = chamfer(po, w, 0.7, block=block, interpret=True)
+    want = ref.chamfer_ref(po, w, 0.7)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("BH,S,hd,bq,bk", [
+    (2, 128, 64, 64, 64),
+    (4, 256, 64, 64, 128),
+    (1, 512, 128, 128, 128),
+    (3, 256, 32, 256, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(BH, S, hd, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (BH, S, hd), dtype)
+    k = jax.random.normal(ks[1], (BH, S, hd), dtype)
+    v = jax.random.normal(ks[2], (BH, S, hd), dtype)
+    out = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("B,In,H,block", [
+    (64, 27, 40, 32),
+    (100, 16, 64, 64),   # ragged batch
+    (8, 8, 8, 8),
+])
+def test_lstm_cell_kernel(B, In, H, block):
+    from repro.kernels.lstm_cell import lstm_cell
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, In))
+    h = jax.random.normal(ks[1], (B, H))
+    c = jax.random.normal(ks[2], (B, H))
+    w = jax.random.normal(ks[3], (In + H, 4 * H)) * 0.2
+    b = jax.random.normal(ks[4], (4 * H,)) * 0.1
+    h2, c2 = lstm_cell(x, h, c, w, b, block=block, interpret=True)
+    h_ref, c_ref = ref.lstm_cell_ref(x, h, c, w, b)
+    np.testing.assert_allclose(h2, h_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(c2, c_ref, rtol=2e-5, atol=2e-5)
+
+
+def test_lstm_cell_matches_core_lstm_step():
+    from repro.core import lstm as LS
+    from repro.kernels.lstm_cell import lstm_cell
+
+    p = LS.lstm_init(jax.random.PRNGKey(0), 12, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 12))
+    h = jnp.zeros((4, 16))
+    c = jnp.zeros((4, 16))
+    (h_ref, c_ref), _ = LS.lstm_step(p, (h, c), x)
+    h2, c2 = lstm_cell(x, h, c, p["w"], p["b"], block=4, interpret=True)
+    np.testing.assert_allclose(h2, h_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(c2, c_ref, rtol=2e-5, atol=2e-5)
+
+
+def test_ops_wrappers_fall_back_on_cpu():
+    from repro.kernels import ops
+
+    table = jnp.ones((16, 128))
+    idx = jnp.zeros((2, 3), jnp.int32)
+    out = ops.gather_pool(table, idx, use_pallas=True)  # CPU -> jnp ref
+    np.testing.assert_allclose(out, 3 * np.ones((2, 128)))

@@ -1,0 +1,25 @@
+"""Linear performance model (paper Fig. 18)."""
+import numpy as np
+import pytest
+
+from repro.core.perf_model import LinearPerfModel, fit_perf_model
+
+
+def test_exact_recovery():
+    hr = np.linspace(0, 1, 20)
+    lat = 100.0 - 60.0 * hr
+    m = fit_perf_model(hr, lat)
+    assert m.intercept == pytest.approx(100.0, rel=1e-6)
+    assert m.slope == pytest.approx(-60.0, rel=1e-6)
+    assert m.rmse < 1e-9
+
+
+def test_noisy_fit_and_rmse():
+    rng = np.random.default_rng(0)
+    hr = rng.random(200)
+    lat = 80.0 - 40.0 * hr + rng.normal(0, 1.0, 200)
+    m = fit_perf_model(hr, lat)
+    assert m.slope == pytest.approx(-40.0, rel=0.05)
+    assert 0.5 < m.rmse < 2.0
+    pred = m.predict([0.0, 1.0])
+    assert pred[0] > pred[1]

@@ -1,0 +1,100 @@
+"""The two RecMG models: learnability, shapes, and the end-to-end policy
+(Algorithms 1&2 driven by model outputs) beating plain LRU."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.belady import belady_labels
+from repro.core.caching_model import (CachingModelConfig,
+                                      evaluate_caching_model,
+                                      init_caching_model, predict_bits,
+                                      train_caching_model)
+from repro.core.cache_sim import FALRU, simulate
+from repro.core.features import make_windows, split_train_eval
+from repro.core.lstm import n_params
+from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
+                                       init_prefetch_model,
+                                       make_prefetch_data, predict_sequences,
+                                       train_prefetch_model)
+from repro.core.recmg import RecMGOutputs, precompute_outputs, run_recmg
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_trace):
+    tr = tiny_trace
+    keys = tr.global_id
+    cap = int(0.2 * tr.unique_count())
+    labels, hits, miss = belady_labels(keys, cap)
+    mcfg = CachingModelConfig(n_tables=tr.n_tables)
+    data = make_windows(tr, labels=labels)
+    trd, evd = split_train_eval(data)
+    cparams, closs = train_caching_model(trd, mcfg, epochs=2, batch_size=256)
+    return tr, cap, labels, mcfg, cparams, trd, evd, closs
+
+
+def test_param_budgets():
+    c = init_caching_model(jax.random.PRNGKey(0), CachingModelConfig())
+    p = init_prefetch_model(jax.random.PRNGKey(0), PrefetchModelConfig())
+    # Paper: ~37K caching, ~74K prefetch (1 and 2 LSTM stacks).
+    assert 25_000 < n_params(c) < 50_000
+    assert 50_000 < n_params(p) < 100_000
+
+
+def test_caching_model_learns(trained):
+    tr, cap, labels, mcfg, cparams, trd, evd, closs = trained
+    assert closs[-1] < closs[0]
+    train_acc = evaluate_caching_model(cparams, trd.batch(np.arange(0, len(trd), 5)))
+    assert train_acc > 0.55  # clearly above chance on its own data
+
+
+def test_predict_bits_shape(trained):
+    tr, cap, labels, mcfg, cparams, trd, evd, _ = trained
+    bits = predict_bits(cparams, evd)
+    assert bits.shape == (len(evd), mcfg.in_len)
+    assert bits.dtype == bool
+
+
+def test_prefetch_model_trains(tiny_trace):
+    tr = tiny_trace
+    pcfg = PrefetchModelConfig(n_tables=tr.n_tables)
+    pdata = make_prefetch_data(tr, stride=15)
+    pparams, losses = train_prefetch_model(pdata, pcfg, epochs=2,
+                                           batch_size=256)
+    assert losses[-1] < losses[0]
+    po = predict_sequences(pparams, pcfg, pdata)
+    assert po.shape == (len(pdata), pcfg.out_len, pcfg.rep_dim)
+    assert np.all(np.isfinite(po))
+
+
+def test_chamfer_beats_l2_training(tiny_trace):
+    """Paper Fig. 11: L2 + window==|PO| plateaus; Chamfer keeps improving."""
+    tr = tiny_trace
+    pdata = make_prefetch_data(tr, stride=15)
+    losses = {}
+    for loss in ("chamfer", "l2"):
+        pcfg = PrefetchModelConfig(n_tables=tr.n_tables, loss=loss)
+        _, ls = train_prefetch_model(pdata, pcfg, epochs=2, batch_size=256)
+        losses[loss] = ls
+    rel_drop = lambda ls: (ls[0] - np.mean(ls[-10:])) / abs(ls[0])
+    assert rel_drop(losses["chamfer"]) > 0.2
+
+
+def test_recmg_oracle_beats_lru(tiny_trace):
+    """With oracle (Belady) keep-bits, the RecMG buffer must beat LRU."""
+    tr = tiny_trace
+    keys = tr.global_id
+    cap = int(0.1 * tr.unique_count())
+    labels, _, _ = belady_labels(keys, cap)
+    outputs = precompute_outputs(tr)  # no models: bits come from oracle
+    res = run_recmg(tr, cap, outputs, oracle_bits=labels, use_prefetch=False)
+    lru = simulate(keys, FALRU(cap))
+    assert res.hits > lru.hits
+    assert res.accesses == lru.accesses
+
+
+def test_recmg_learned_pipeline(trained):
+    tr, cap, labels, mcfg, cparams, trd, evd, _ = trained
+    outputs = precompute_outputs(tr, caching=(cparams, mcfg))
+    res = run_recmg(tr, cap, outputs, use_prefetch=False)
+    assert res.accesses == len(tr)
+    assert res.hits + res.on_demand == res.accesses

@@ -1,0 +1,87 @@
+"""Partitioning rules: divisibility fallback, FSDP/TP assignment, batch and
+cache specs — validated on a small host mesh."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models.model_api import build
+from repro.sharding import partition as sp
+
+
+def _mesh():
+    # Single CPU device: axes of size 1 — rules still exercise fully.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_fit_spec_drops_nondivisible():
+    mesh = _mesh()
+    spec = sp.fit_spec((15, 64), ["model", "data"], mesh)
+    assert spec == P("model", "data")  # size-1 axes always divide
+
+
+def test_fit_spec_progressive_tuple():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 4, "model": 8}
+        axis_names = ("pod", "data", "model")
+
+    spec = sp.fit_spec((8, 100), [("pod", "data"), None], FakeMesh)
+    assert spec == P(("pod", "data"))
+    spec = sp.fit_spec((6, 100), [("pod", "data"), None], FakeMesh)
+    assert spec == P("pod")  # 6 % 8 != 0 -> drop "data", 6 % 2 == 0 -> keep
+    spec = sp.fit_spec((5, 100), [("pod", "data"), None], FakeMesh)
+    assert spec == P()
+
+
+def test_param_pspecs_cover_all_leaves():
+    for arch in ["qwen2.5-3b", "grok-1-314b", "falcon-mamba-7b",
+                 "whisper-large-v3", "dlrm-recmg"]:
+        bundle = build(get_config(arch).reduced())
+        ps = bundle.param_struct()
+        specs = sp.param_pspecs(ps, _mesh())
+        n_leaves = len(jax.tree_util.tree_leaves(ps))
+        n_specs = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_specs == n_leaves, arch
+
+
+def test_param_pspecs_shard_big_dims():
+    class FakeMesh:
+        shape = {"data": 4, "model": 8}
+        axis_names = ("data", "model")
+
+    bundle = build(get_config("qwen3-14b"))
+    specs = sp.param_pspecs(bundle.param_struct(), FakeMesh)
+    # embed (V, D): vocab on model, d_model on data.
+    assert specs["embed"] == P("model", "data")
+    # stacked attn wq (L, D, H*hd): layer dim unsharded.
+    assert specs["blocks"]["attn"]["wq"][0] is None
+    assert "model" in jax.tree_util.tree_leaves(
+        specs["blocks"]["attn"]["wq"], is_leaf=lambda x: True)[0]
+
+
+def test_batch_and_cache_specs():
+    mesh = _mesh()
+    bundle = build(get_config("qwen2.5-3b").reduced())
+    shape = ShapeConfig("t", "decode", 32, 4)
+    bs = bundle.batch_struct(shape)
+    specs = sp.batch_pspecs(bs, mesh)
+    assert specs["token"][0] == "data"
+    cs = bundle.cache_struct(shape)
+    cspecs = sp.cache_pspecs(cs, mesh)
+    assert cspecs["k"] == P(None, "data", "model")
+    assert cspecs["pos"] == P()
+
+
+def test_constrain_batch_noop_outside_scope():
+    x = jax.numpy.ones((4, 8))
+    assert sp.constrain_batch(x) is x
+
+
+def test_constrain_batch_inside_scope():
+    mesh = _mesh()
+    with sp.activation_sharding(mesh):
+        y = jax.jit(lambda x: sp.constrain_batch(x))(jax.numpy.ones((4, 8)))
+    np.testing.assert_allclose(y, np.ones((4, 8)))

@@ -1,0 +1,81 @@
+"""Trace generator statistics, reuse-distance correctness, data pipelines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.trace import (TraceGenConfig, generate_trace,
+                              reuse_distance_cdf, reuse_distances)
+from repro.data.dlrm_data import DLRMDataConfig, query_batches
+from repro.data.lm_data import LMDataConfig, batch_at
+
+
+def brute_reuse_distance(keys):
+    out = []
+    last = {}
+    for i, k in enumerate(keys):
+        if k in last:
+            out.append(len(set(keys[last[k] + 1 : i])))
+        else:
+            out.append(-1)
+        last[k] = i
+    return np.array(out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=120))
+def test_reuse_distance_matches_bruteforce(keys):
+    keys = np.array(keys)
+    np.testing.assert_array_equal(reuse_distances(keys),
+                                  brute_reuse_distance(keys))
+
+
+def test_trace_power_law(tiny_trace):
+    gid = tiny_trace.global_id
+    vals, counts = np.unique(gid, return_counts=True)
+    counts = np.sort(counts)[::-1]
+    top20 = counts[: max(1, len(counts) // 5)].sum()
+    # Power-law-ish: top 20% of vectors take a large share of accesses.
+    assert top20 / counts.sum() > 0.5
+
+
+def test_trace_long_reuse_tail(tiny_trace):
+    edges, frac = reuse_distance_cdf(tiny_trace.global_id[:20000], 13)
+    # A noticeable tail beyond typical buffer size (scaled analogue of the
+    # paper's "20% of accesses beyond 2^20").
+    assert frac[10] > 0.05
+
+
+def test_trace_determinism():
+    cfg = TraceGenConfig(n_tables=4, rows_per_table=100, n_accesses=5000)
+    a = generate_trace(cfg)
+    b = generate_trace(cfg)
+    np.testing.assert_array_equal(a.global_id, b.global_id)
+
+
+def test_trace_bounds(tiny_trace):
+    assert tiny_trace.row_id.min() >= 0
+    assert (tiny_trace.row_id < tiny_trace.rows_per_table[0]).all()
+    assert (tiny_trace.table_id < tiny_trace.n_tables).all()
+
+
+def test_lm_data_deterministic_resumable():
+    cfg = LMDataConfig(vocab=128, seq_len=16, global_batch=2)
+    a = batch_at(cfg, 5)
+    b = batch_at(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_at(cfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert (a["labels"][:, :-1] == a["tokens"][:, 1:]).all()
+    assert (a["labels"][:, -1] == -1).all()
+
+
+def test_dlrm_data_shapes():
+    cfg = DLRMDataConfig(n_tables=4, rows_per_table=64, multi_hot=3, batch=8)
+    batches = list(query_batches(cfg, n_batches=3))
+    assert len(batches) == 3
+    b = batches[0]
+    assert b["dense"].shape == (8, 13)
+    assert b["sparse"].shape == (8, 4, 3)
+    assert set(np.unique(b["label"])) <= {0.0, 1.0}
+    assert b["sparse"].max() < 64
