@@ -160,7 +160,70 @@ def quantized_buffer_beyond_paper(ctx: BenchContext):
              "per-row scale quantization")
 
 
+def lookup_throughput(ctx: BenchContext):
+    """Tentpole microbench: batched array-backed store vs. the per-key seed
+    reference (kept in ``repro.core.tiered_reference``) on identical
+    Zipf-skewed batches, LRU policy.  Acceptance bar: >= 3x at batch >=
+    1024."""
+    import time
+
+    import numpy as np
+
+    from repro.core.tiered import TieredEmbeddingStore
+    from repro.core.tiered_reference import ReferenceTieredStore
+
+    rng = np.random.default_rng(0)
+    n_rows, d, batch = 65_536, 64, 2048
+    host = rng.normal(size=(n_rows, d)).astype(np.float32)
+    cap = n_rows // 8
+    ranks = np.minimum(rng.zipf(1.1, size=64 * batch), n_rows) - 1
+    ids = rng.permutation(n_rows)[ranks].astype(np.int64)
+    n_batches = 16 if ctx.cfg.quick else 32
+
+    def run_store(store, n_b):
+        for b in range(30):  # warm the buffer + compile caches
+            store.lookup(ids[b * batch: (b + 1) * batch])
+        t0 = time.perf_counter()
+        for b in range(n_b):
+            lo = (b % 30) * batch
+            store.lookup(ids[lo: lo + batch])
+        return n_b * batch / (time.perf_counter() - t0)
+
+    fast = run_store(TieredEmbeddingStore(host, cap, policy="lru"),
+                     n_batches)
+    slow = run_store(ReferenceTieredStore(host, cap, policy="lru"),
+                     max(4, n_batches // 8))
+    ctx.emit("tentpole", "batched_lookup_rows_per_s", round(fast),
+             f"batch={batch} cap={cap} lru")
+    ctx.emit("tentpole", "reference_lookup_rows_per_s", round(slow),
+             "per-key seed implementation")
+    ctx.emit("tentpole", "lookup_speedup_vs_reference",
+             round(fast / max(slow, 1e-9), 2), "acceptance bar: >= 3x")
+    return fast / max(slow, 1e-9)
+
+
+def multi_table_facade(ctx: BenchContext):
+    """Per-table facade vs. monolithic store at the same total row budget
+    (per-table isolation: a hot table cannot starve the rest)."""
+    cfg, tr = _serving_cfg(ctx)
+    params = init_dlrm(jax.random.PRNGKey(0), cfg)
+    cap = int(0.18 * tr.unique_count())
+    short = tr.slice(0, 40_000)
+    mono = serve_trace(cfg, params, short, cap, "lru", None,
+                       batch_queries=32)
+    multi = serve_trace(cfg, params, short, cap, "lru", None,
+                        batch_queries=32, multi_table=True)
+    ctx.emit("facade", "mono_hit_rate", mono["hit_rate"])
+    ctx.emit("facade", "multi_table_hit_rate", multi["hit_rate"],
+             f"{cfg.n_tables} per-table stores, shared {cap}-row budget")
+    ctx.emit("facade", "multi_table_fetch_ms",
+             round(multi["modeled_fetch_ms_per_batch"], 3),
+             f"mono: {mono['modeled_fetch_ms_per_batch']:.3f}")
+
+
 def run(ctx: BenchContext):
+    lookup_throughput(ctx)
     fig16_17_e2e(ctx)
     fig18_19_perf_model(ctx)
     quantized_buffer_beyond_paper(ctx)
+    multi_table_facade(ctx)

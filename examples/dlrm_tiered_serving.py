@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--capacity-frac", type=float, default=0.18)
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--batch-queries", type=int, default=32)
+    ap.add_argument("--multi-table", action="store_true",
+                    help="serve through the per-table facade (one batched "
+                         "store per sparse feature, shared row budget)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -74,10 +77,12 @@ def main():
 
     print("\n[2/3] serving with production LRU...")
     lru = serve_trace(cfg, params, trace, cap, "lru", None,
-                      batch_queries=args.batch_queries)
+                      batch_queries=args.batch_queries,
+                      multi_table=args.multi_table)
     print("\n[3/3] serving with RecMG (pipelined models)...")
     rec = serve_trace(cfg, params, trace, cap, "recmg", outputs,
-                      batch_queries=args.batch_queries)
+                      batch_queries=args.batch_queries,
+                      multi_table=args.multi_table)
 
     def total_ms(r):
         # Paper §VII-F decomposition: device compute + slow-tier model

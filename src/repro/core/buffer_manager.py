@@ -20,6 +20,11 @@ stored_priority + stored_epoch) over a lazy min-heap whose entries are
 validated by (score, seq) — ties broken by insertion age.
 ``SlowRecMGBuffer`` is the literal O(capacity) transcription used to
 cross-check in tests.
+
+Batched drivers use the chunk-at-a-time surface — ``set_priorities``,
+``fetch_many``, ``populate_many``, and ``access_chunk`` (the replay inner
+loop of ``run_recmg``) — instead of per-key calls; ``set_priority`` is the
+public single-key form (``_set_priority`` remains as an alias).
 """
 from __future__ import annotations
 
@@ -45,12 +50,72 @@ class RecMGBuffer:
     def contains(self, key: int) -> bool:
         return key in self.score
 
-    def _set_priority(self, key: int, priority: int):
+    def set_priority(self, key: int, priority: int):
+        """Insert ``key`` or refresh its priority (public single-key API)."""
         s = priority + self.epoch
         self.score[key] = s
         self.seq += 1
         self._seq_of[key] = self.seq
         heapq.heappush(self.heap, (s, self.seq, key))
+
+    # Backwards-compatible alias; callers should use ``set_priority``.
+    _set_priority = set_priority
+
+    # ---------------- bulk (chunk-at-a-time) API ----------------
+
+    def set_priorities(self, keys: Iterable[int], priority: int,
+                       only_new: bool = False):
+        """Batched :meth:`set_priority` over a chunk of keys.
+
+        ``only_new=True`` skips keys that already hold an entry (the
+        admission-time insert of the tiered store, which must not demote a
+        key the caching model just ranked)."""
+        score, seq_of, heap = self.score, self._seq_of, self.heap
+        s = int(priority) + self.epoch
+        seq = self.seq
+        for k in keys:
+            k = int(k)
+            if only_new and k in score:
+                continue
+            seq += 1
+            score[k] = s
+            seq_of[k] = seq
+            heapq.heappush(heap, (s, seq, k))
+        self.seq = seq
+
+    def fetch_many(self, keys: Iterable[int], priority: int):
+        """Batched :meth:`fetch`: insert a chunk, evicting as needed."""
+        for k in keys:
+            self.fetch(int(k), priority)
+
+    def populate_many(self, n: int) -> List[int]:
+        """Evict up to ``n`` victims in one call (Algorithm 2, batched)."""
+        out = []
+        for _ in range(n):
+            v = self.populate()
+            if v is None:
+                break
+            out.append(v)
+        return out
+
+    def access_chunk(self, keys: np.ndarray, priority: int) -> np.ndarray:
+        """Serve a chunk of demand accesses; returns a per-access hit mask.
+
+        A miss fetches the key at ``priority`` (the tiered runtime's
+        on-demand insert).  This is the replay inner loop hoisted out of
+        ``run_recmg`` so drivers go chunk-at-a-time instead of paying
+        per-access method dispatch."""
+        score = self.score
+        hits = np.empty(len(keys), dtype=bool)
+        at_cap = self.capacity <= len(score) + len(keys)  # may need room
+        for i, k in enumerate(keys.tolist()):
+            h = k in score
+            hits[i] = h
+            if not h:
+                if at_cap:
+                    self._make_room()
+                self.set_priority(k, priority)
+        return hits
 
     def populate(self) -> Optional[int]:
         """Algorithm 2 with RRIP aging semantics: evict the minimum-priority
@@ -103,11 +168,20 @@ class RecMGBuffer:
         cache-friendly/averse insertion, which the paper builds on).  The
         paper's literal ``C[i] + eviction_speed`` keeps both classes within
         1 of each other and measures within noise of LRU; see EXPERIMENTS.md
-        §Faithfulness notes."""
+        §Faithfulness notes.
+
+        Accepts plain iterables or NumPy arrays (arrays are the bulk
+        chunk-at-a-time path used by the batched tiered store)."""
+        if isinstance(trunk, np.ndarray):
+            trunk = trunk.tolist()
+        if isinstance(caching_bits, np.ndarray):
+            caching_bits = caching_bits.tolist()
+        if isinstance(prefetch_keys, np.ndarray):
+            prefetch_keys = prefetch_keys.tolist()
         for key, c in zip(trunk, caching_bits):
             pr = int(c) * self.ev if scaled_bits else int(c) + self.ev
             if key in self.score:
-                self._set_priority(key, pr)
+                self.set_priority(key, pr)
             else:
                 self.fetch(key, pr)
         for key in prefetch_keys:

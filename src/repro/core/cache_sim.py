@@ -5,10 +5,11 @@ DRRIP, Hawkeye, Mockingjay-style reuse predictors, and Belady's OPT, all
 treating an embedding vector as the atomic replacement unit (ChampSim in the
 paper; reimplemented natively here — see DESIGN.md §7).
 
-All policies implement ``access(key) -> bool`` (True = hit) and
-``insert_prefetch(key)``; a unified ``simulate`` driver attributes hits to
-{caching policy, prefetcher} and counts on-demand fetches, reproducing the
-paper's Figure 14 breakdown.
+All policies implement ``access(key) -> bool`` (True = hit),
+``insert_prefetch(key)``, and a bulk ``access_many(keys) -> hit mask`` used
+for chunk-at-a-time replay; a unified ``simulate`` driver attributes hits
+to {caching policy, prefetcher} and counts on-demand fetches, reproducing
+the paper's Figure 14 breakdown.
 """
 from __future__ import annotations
 
@@ -40,6 +41,14 @@ class CacheBase:
         if not self.contains(key):
             self.access(key)
 
+    def access_many(self, keys: np.ndarray) -> np.ndarray:
+        """Bulk demand-access path: serve a chunk of keys, return a hit
+        mask.  Policies override this with a tighter loop; the default just
+        removes per-access driver dispatch."""
+        access = self.access
+        return np.fromiter((access(int(k)) for k in keys), dtype=bool,
+                           count=len(keys))
+
 
 class FALRU(CacheBase):
     """Fully-associative LRU."""
@@ -62,6 +71,23 @@ class FALRU(CacheBase):
                 self.od.popitem(last=False)
             self.od[key] = True
         return hit
+
+    def access_many(self, keys):
+        # Tight chunk loop: bound methods hoisted, no per-access dispatch.
+        od, cap = self.od, self.capacity
+        move, pop = od.move_to_end, od.popitem
+        out = np.empty(len(keys), dtype=bool)
+        for i, k in enumerate(keys.tolist() if isinstance(keys, np.ndarray)
+                              else keys):
+            if k in od:
+                move(k)
+                out[i] = True
+            else:
+                if len(od) >= cap:
+                    pop(last=False)
+                od[k] = True
+                out[i] = False
+        return out
 
 
 class SetAssoc(CacheBase):
@@ -387,7 +413,18 @@ class SimResult:
 
 def simulate(keys: np.ndarray, cache: CacheBase, prefetcher=None,
              max_inflight_per_access: int = 8) -> SimResult:
-    """Drive a key stream through (cache, prefetcher)."""
+    """Drive a key stream through (cache, prefetcher).
+
+    Without a prefetcher the whole trace replays through the cache's bulk
+    ``access_many`` (chunk-at-a-time); prefetchers need per-access candidate
+    generation, so that path stays access-at-a-time."""
+    if prefetcher is None:
+        hits = cache.access_many(np.asarray(keys))
+        res = SimResult()
+        res.accesses = len(keys)
+        res.hits = int(np.count_nonzero(hits))
+        res.on_demand = res.accesses - res.hits
+        return res
     res = SimResult()
     prefetched = set()  # resident-and-not-yet-demanded prefetch fills
     for key in keys:

@@ -6,6 +6,12 @@ one jitted pass — exactly the paper's CPU-side pipelined deployment, where
 predictions for chunk t are computed while the accelerator serves chunk t-1
 (``pipelined=True`` applies outputs one chunk late to model that skew).
 
+Trace replay goes **chunk-at-a-time**: accesses between two chunk
+boundaries are served in one ``RecMGBuffer.access_chunk`` /
+``FALRU.access_many`` call (the bulk API), and Algorithm 1 is applied once
+per boundary — same semantics as the per-access loop, without per-access
+driver dispatch.
+
 ``run_recmg`` produces the Figure-14-style access breakdown: buffer hits due
 to the caching policy, hits due to prefetch, and on-demand fetches.
 """
@@ -64,16 +70,42 @@ def precompute_outputs(trace: Trace, caching=None, prefetch=None,
     return RecMGOutputs(starts, bits, ids)
 
 
+def _replay_segment(access, seg: np.ndarray, res: SimResult,
+                    prefetched: set):
+    """Serve one chunk of demand accesses through a bulk-access callable
+    (``seg -> hit mask``), attributing hits/misses and first-touch
+    prefetch hits."""
+    if not len(seg):
+        return
+    hits = access(seg)
+    nh = int(np.count_nonzero(hits))
+    res.accesses += len(seg)
+    res.hits += nh
+    res.on_demand += len(seg) - nh
+    if prefetched:  # only non-empty between a prefetch issue and first use
+        for k, h in zip(seg.tolist(), hits.tolist()):
+            if k in prefetched:
+                if h:
+                    res.prefetch_hits += 1
+                    res.prefetch_useful += 1
+                prefetched.discard(k)
+
+
 def run_recmg(trace: Trace, capacity: int, outputs: RecMGOutputs,
               eviction_speed: int = 4, pipelined: bool = True,
               use_caching: bool = True, use_prefetch: bool = True,
               oracle_bits: Optional[np.ndarray] = None) -> SimResult:
-    """Replay a trace through the RecMG-managed buffer.
+    """Replay a trace through the RecMG-managed buffer, chunk at a time.
+
+    Accesses between two chunk boundaries are served in one
+    ``RecMGBuffer.access_chunk`` call (the bulk path); Algorithm 1 for the
+    chunk ending at each boundary is applied right after its segment, one
+    chunk late when ``pipelined`` (the paper's CPU-side skew).
 
     oracle_bits: per-access Belady keep labels — upper-bound variant used by
     benchmarks ("what if the caching model were perfect").
     """
-    keys = trace.global_id
+    keys = trace.global_id.astype(np.int64)
     n = len(keys)
     buf = RecMGBuffer(capacity, eviction_speed)
     res = SimResult()
@@ -84,34 +116,21 @@ def run_recmg(trace: Trace, capacity: int, outputs: RecMGOutputs,
         if outputs.caching_bits is not None
         else 15
     )
-    chunk_of = {int(s): i for i, s in enumerate(outputs.chunk_starts)}
 
+    access = lambda seg: buf.access_chunk(seg, eviction_speed)  # noqa: E731
     pending = None  # (trunk, bits, prefetch) applied at next chunk boundary
-
-    for i in range(n):
-        k = int(keys[i])
-        hit = buf.contains(k)
-        res.accesses += 1
-        if hit:
-            res.hits += 1
-            if k in prefetched:
-                res.prefetch_hits += 1
-                res.prefetch_useful += 1
-                prefetched.discard(k)
-        else:
-            res.on_demand += 1
-            prefetched.discard(k)
-            # On-demand fetch: enters the buffer at base priority; the
-            # caching model's bit arrives with load_embeddings below.
-            buf.fetch(k, eviction_speed)
-
-        ci = chunk_of.get(i)
-        if ci is None:
-            continue
+    seg_start = 0
+    for ci, s in enumerate(np.asarray(outputs.chunk_starts,
+                                      np.int64).tolist()):
+        if s >= n:
+            break
+        # Segment = accesses up to and including the boundary access s.
+        _replay_segment(access, keys[seg_start: s + 1], res, prefetched)
+        seg_start = s + 1
         # Chunk boundary: run Algorithm 1 for the *previous* chunk.
-        trunk = keys[max(0, i - in_len): i].astype(np.int64)
+        trunk = keys[max(0, s - in_len): s]
         if oracle_bits is not None:
-            bits = oracle_bits[max(0, i - in_len): i]
+            bits = oracle_bits[max(0, s - in_len): s]
         elif outputs.caching_bits is not None and use_caching:
             bits = outputs.caching_bits[ci]
         else:
@@ -119,49 +138,46 @@ def run_recmg(trace: Trace, capacity: int, outputs: RecMGOutputs,
         pf = (
             outputs.prefetch_ids[ci]
             if (outputs.prefetch_ids is not None and use_prefetch)
-            else []
+            else np.empty(0, np.int64)
         )
-        item = (trunk.tolist(), list(np.asarray(bits).astype(int)),
-                [int(p) for p in pf])
+        item = (trunk, np.asarray(bits).astype(np.int64),
+                np.asarray(pf, np.int64))
         if pipelined:
             item, pending = pending, item
             if item is None:
                 continue
         t_, b_, p_ = item
-        for p in p_:
+        for p in p_.tolist():
             if not buf.contains(p):
                 prefetched.add(p)
                 res.prefetch_issued += 1
         buf.load_embeddings(t_, b_, p_)
+    _replay_segment(access, keys[seg_start:], res, prefetched)
     return res
 
 
 def run_lru_pf(trace: Trace, capacity: int, outputs: RecMGOutputs) -> SimResult:
-    """LRU + our prefetch model (the paper's single-model ablation LRU+PF)."""
-    keys = trace.global_id
+    """LRU + our prefetch model (the paper's single-model ablation LRU+PF),
+    replayed chunk-at-a-time through the cache's bulk ``access_many``."""
+    keys = trace.global_id.astype(np.int64)
+    n = len(keys)
     cache = FALRU(capacity)
     res = SimResult()
     prefetched = set()
-    chunk_of = {int(s): i for i, s in enumerate(outputs.chunk_starts)}
-    for i in range(len(keys)):
-        k = int(keys[i])
-        hit = cache.access(k)
-        res.accesses += 1
-        if hit:
-            res.hits += 1
-            if k in prefetched:
-                res.prefetch_hits += 1
-                res.prefetch_useful += 1
-                prefetched.discard(k)
-        else:
-            res.on_demand += 1
-            prefetched.discard(k)
-        ci = chunk_of.get(i)
-        if ci is not None and outputs.prefetch_ids is not None:
+    seg_start = 0
+    for ci, s in enumerate(np.asarray(outputs.chunk_starts,
+                                      np.int64).tolist()):
+        if s >= n:
+            break
+        _replay_segment(cache.access_many, keys[seg_start: s + 1],
+                        res, prefetched)
+        seg_start = s + 1
+        if outputs.prefetch_ids is not None:
             for p in outputs.prefetch_ids[ci]:
                 p = int(p)
                 if not cache.contains(p):
                     cache.insert_prefetch(p)
                     prefetched.add(p)
                     res.prefetch_issued += 1
+    _replay_segment(cache.access_many, keys[seg_start:], res, prefetched)
     return res

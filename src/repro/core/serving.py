@@ -1,0 +1,173 @@
+"""Multi-table tiered serving facade — one batched store per sparse feature.
+
+Industrial DLRM serving (Software-Defined Memory, RecShard) manages
+residency per embedding table: tables differ wildly in size and skew, so a
+single global buffer lets one hot table starve the rest.  This facade owns
+one :class:`~repro.core.tiered.TieredEmbeddingStore` per table under a
+**shared byte budget**, split proportionally to table size (rows), and
+routes batched lookups on *global* vector ids (the trace id space:
+``global_id = table_offset + row_id``) to the right store with one
+``searchsorted`` pass.
+
+The facade mirrors the single-store API (``lookup``,
+``apply_model_outputs``, ``stage_model_outputs``, ``stats``,
+``modeled_batch_ms``) so ``launch/serve.py``, the examples, and the
+benchmarks can swap it in with a flag.  Algorithm 1 outputs are routed per
+table and, through ``stage_model_outputs``, land double-buffered at the
+next batch boundary without blocking an in-flight lookup.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiered import TierStats, TieredEmbeddingStore
+
+
+class MultiTableTieredStore:
+    """Per-table batched stores under a shared byte budget.
+
+    Parameters
+    ----------
+    host_tables: per-table host-tier arrays, each (N_t, D).
+    capacity:    total fast-tier rows across all tables (mutually exclusive
+                 with ``byte_budget``).
+    byte_budget: total fast-tier bytes; converted to rows using the
+                 per-row footprint (D*4 for fp32, D+4 for the int8 tier).
+    weights:     optional per-table split weights (default: table rows).
+    """
+
+    def __init__(self, host_tables: Sequence[np.ndarray],
+                 capacity: Optional[int] = None,
+                 byte_budget: Optional[int] = None,
+                 policy: str = "lru", quantize: bool = False,
+                 weights: Optional[Sequence[float]] = None,
+                 min_capacity: int = 4, fetch_us_fixed: float = 30.0,
+                 **store_kw):
+        if (capacity is None) == (byte_budget is None):
+            raise ValueError("pass exactly one of capacity / byte_budget")
+        rows = np.array([t.shape[0] for t in host_tables], np.int64)
+        d = host_tables[0].shape[1]
+        row_bytes = (d + 4) if quantize else d * host_tables[0].dtype.itemsize
+        if capacity is None:
+            capacity = int(byte_budget // row_bytes)
+        w = np.asarray(weights if weights is not None else rows, np.float64)
+        caps = np.maximum(min_capacity,
+                          np.floor(capacity * w / w.sum())).astype(np.int64)
+        caps = np.minimum(caps, rows)  # never exceed the table itself
+        # Lifting small tables to min_capacity can overrun the shared
+        # budget; claw the excess back from the largest stores (down to the
+        # floor).  Only when capacity < n_tables * min_capacity does the
+        # floor win over the budget.
+        excess = int(caps.sum() - capacity)
+        while excess > 0:
+            i = int(np.argmax(caps))
+            take = min(excess, int(caps[i]) - min_capacity)
+            if take <= 0:
+                break
+            caps[i] -= take
+            excess -= take
+        self.offsets = np.concatenate(([0], np.cumsum(rows)))
+        self.capacity = int(caps.sum())
+        self.row_bytes = row_bytes
+        # Sub-stores model only the per-row slow-tier cost; the fixed
+        # per-batch overhead is charged once per *facade* batch with a miss
+        # (matching the monolithic store's accounting, so the bench
+        # comparison measures policy quality, not aggregation artifacts).
+        self.fetch_us_fixed = float(fetch_us_fixed)
+        self._fixed_fetch_s = 0.0
+        self.stores: List[TieredEmbeddingStore] = [
+            TieredEmbeddingStore(t, int(c), policy=policy, quantize=quantize,
+                                 fetch_us_fixed=0.0, **store_kw)
+            for t, c in zip(host_tables, caps)
+        ]
+        self.emb_dim = d
+        # Quantized stores dequantize to f32; otherwise the (jax-
+        # canonicalized) buffer dtype flows through, matching what the
+        # single-store lookup returns.
+        self.out_dtype = (np.float32 if quantize
+                          else self.stores[0].buffer.dtype)
+        self.batches = 0
+
+    @classmethod
+    def from_global_table(cls, host: np.ndarray, rows_per_table: np.ndarray,
+                          **kw) -> "MultiTableTieredStore":
+        """Split a monolithic (sum_rows, D) host table laid out in
+        global-id order into per-table views (zero-copy slices)."""
+        offs = np.concatenate(([0], np.cumsum(rows_per_table)))
+        tables = [host[offs[t]: offs[t + 1]] for t in
+                  range(len(rows_per_table))]
+        return cls(tables, **kw)
+
+    # ---------------- routing ----------------
+
+    def _route(self, global_ids: np.ndarray):
+        gid = np.asarray(global_ids, np.int64).ravel()
+        table = np.searchsorted(self.offsets, gid, side="right") - 1
+        return gid, table, gid - self.offsets[table]
+
+    # ---------------- single-store-compatible API ----------------
+
+    def lookup(self, global_ids: np.ndarray) -> jnp.ndarray:
+        """(M,) global ids -> (M, D); one batched sub-lookup per table hit
+        by this batch, reassembled in request order."""
+        gid, table, local = self._route(global_ids)
+        self.batches += 1
+        out = np.empty((len(gid), self.emb_dim), self.out_dtype)
+        missed = False
+        for t in np.unique(table).tolist():
+            m = table == t
+            st = self.stores[t]
+            od0 = st.stats.on_demand_rows
+            out[m] = np.asarray(st.lookup(local[m]))
+            missed = missed or st.stats.on_demand_rows > od0
+        if missed:
+            self._fixed_fetch_s += self.fetch_us_fixed * 1e-6
+        return jnp.asarray(out)
+
+    def _route_outputs(self, trunk, bits, prefetch_ids, staged: bool):
+        trunk, t_tab, t_loc = self._route(trunk)
+        bits = np.asarray(bits).ravel()[: len(trunk)]  # zip truncation
+        t_tab, t_loc = t_tab[: len(bits)], t_loc[: len(bits)]
+        _, p_tab, p_loc = self._route(prefetch_ids)
+        for t in np.unique(np.concatenate((t_tab, p_tab))).tolist():
+            tm, pm = t_tab == t, p_tab == t
+            store = self.stores[t]
+            fn = store.stage_model_outputs if staged \
+                else store.apply_model_outputs
+            fn(t_loc[tm], bits[tm], p_loc[pm])
+
+    def apply_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
+                            prefetch_ids: np.ndarray):
+        """Route Algorithm 1 outputs (global-id keyed) to each table."""
+        self._route_outputs(trunk, bits, prefetch_ids, staged=False)
+
+    def stage_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
+                            prefetch_ids: np.ndarray):
+        """Double-buffered apply: route now, land at each store's next
+        lookup boundary."""
+        self._route_outputs(trunk, bits, prefetch_ids, staged=True)
+
+    def flush_staged(self):
+        """Apply all staged outputs now (the inter-batch gap)."""
+        for s in self.stores:
+            s.flush_staged()
+
+    # ---------------- aggregated accounting ----------------
+
+    @property
+    def stats(self) -> TierStats:
+        agg = TierStats()
+        for s in self.stores:
+            agg.merge(s.stats)
+        agg.batches = self.batches  # facade batches, not per-store sum
+        agg.modeled_fetch_s += self._fixed_fetch_s
+        return agg
+
+    def modeled_batch_ms(self) -> float:
+        return 1e3 * self.stats.modeled_fetch_s / max(self.batches, 1)
+
+    def per_table_hit_rates(self) -> List[float]:
+        return [s.stats.hit_rate for s in self.stores]

@@ -1,26 +1,50 @@
-"""Tiered-memory embedding serving runtime (paper §VI).
+"""Batched tiered-memory embedding serving runtime (paper §VI).
 
 Fast tier: a device-resident buffer of embedding vectors (on TPU this is the
-HBM software-managed buffer; gathers go through the Pallas fused kernel when
-available).  Slow tier: the full embedding tables in host memory.  A miss
-triggers an on-demand host->device fetch (O(10us) per the paper).
+HBM software-managed buffer; gathers go through the Pallas row-gather kernel
+when available).  Slow tier: the full embedding tables in host memory.  A
+miss triggers an on-demand host->device fetch (O(10us) per the paper).
+
+The residency engine is **array-backed and batched** — the hot path does no
+per-key Python work:
+
+* ``_slot_map``  (N,) int32 — key -> slot, -1 when not resident (the dense
+  inverse of the old ``slot_of`` dict; host tables are materialised arrays,
+  so the key space is exactly ``range(N)``).
+* ``_slot_key``  (C,) int64 — slot -> key, -1 when free (with ``_slot_map``
+  this forms the two-way residency invariant checked in tests).
+* ``_last_use``  (C,) int64 — LRU ranks from a global clock; batched
+  eviction ranks all victims in one ``argpartition`` pass.
+* ``_admit_seq`` (C,) int64 — admission order (the eviction fallback the
+  dict insertion order used to provide).
+* ``_pf_flag``   (C,) bool — prefetched-and-not-yet-demanded, for the
+  Fig. 14 hit attribution.
+
+``lookup`` partitions a batch into hits/misses with one vectorized gather on
+``_slot_map``, admits all misses at once (single fused scatter into the
+device buffer), and serves working sets larger than the buffer straight from
+the host tier.  The per-key seed implementation is preserved verbatim in
+:mod:`repro.core.tiered_reference`; ``tests/test_tiered_equivalence.py``
+proves both produce identical counters on a recorded trace.
 
 The buffer is co-managed by the RecMG models exactly as in Algorithms 1 & 2:
 the caching model's bits set priorities of the just-accessed chunk, the
-prefetch model's predictions are inserted ahead of use, both computed
-one batch ahead (pipelined) on the CPU.
+prefetch model's predictions are inserted ahead of use, both computed one
+batch ahead (pipelined) on the CPU.  ``stage_model_outputs`` double-buffers
+those outputs so they land at the next batch boundary without blocking an
+in-flight ``lookup``.
 
 Besides wall-clock measurement, the runtime reports an analytic latency
 decomposition using the slow-tier cost model (fetch_us per missing row +
 fixed per-batch overhead) so results transfer to the real two-tier hardware
 this container lacks; the linear performance model of §VII-F (Fig. 18) is
-fitted from these runs.
+fitted from these runs.  See ``docs/architecture.md`` for the full state
+layout and invariants.
 """
 from __future__ import annotations
 
 import time
-from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,6 +52,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.buffer_manager import RecMGBuffer
+
+
+def _bucket(n: int) -> int:
+    """Round up to a power of two (>= 16): the shape-bucketing that keeps
+    the jitted scatter/gather from recompiling for every working-set size."""
+    return max(16, 1 << (int(n) - 1).bit_length())
 
 
 @dataclass
@@ -58,6 +88,15 @@ class TierStats:
             "modeled_fetch_s": round(self.modeled_fetch_s, 4),
         }
 
+    def merge(self, other: "TierStats") -> "TierStats":
+        """Aggregate (for the multi-table facade)."""
+        for f in ("batches", "lookups", "hits", "prefetch_hits",
+                  "on_demand_rows"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        for f in ("fetch_s", "gather_s", "model_s", "modeled_fetch_s"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
 
 class TieredEmbeddingStore:
     """Host table (N, D) + device buffer (C, D) with pluggable policy."""
@@ -65,38 +104,54 @@ class TieredEmbeddingStore:
     def __init__(self, host_table: np.ndarray, capacity: int,
                  policy: str = "lru", eviction_speed: int = 4,
                  fetch_us_per_row: float = 10.0, fetch_us_fixed: float = 30.0,
-                 quantize: bool = False):
+                 quantize: bool = False, use_kernel: Optional[bool] = None):
         """``quantize=True``: int8 rows + per-row scale in the fast tier —
         the mixed-precision-embedding trick the paper cites ([90]): ~4x the
         resident rows per HBM byte, so at a fixed byte budget the buffer
         holds 4x capacity and the hit rate rises (beyond-paper experiment in
-        benchmarks/bench_e2e.py)."""
+        benchmarks/bench_e2e.py).
+
+        ``use_kernel``: route the device gather through the Pallas
+        row-gather kernel (default: auto, TPU backend only)."""
         self.host = host_table
         n, d = host_table.shape
-        self.capacity = int(capacity)
+        self.capacity = max(1, int(capacity))  # same clamp as RecMGBuffer
         self.quantize = quantize
         if quantize:
             self.buffer = jnp.zeros((self.capacity, d), jnp.int8)
             self.scales = jnp.zeros((self.capacity,), jnp.float32)
         else:
             self.buffer = jnp.zeros((self.capacity, d), host_table.dtype)
-        self.slot_of: Dict[int, int] = {}
-        self.free: List[int] = list(range(self.capacity - 1, -1, -1))
+        # -------- array-backed residency state (see module docstring) -----
+        self._slot_map = np.full(n, -1, np.int32)
+        self._slot_key = np.full(self.capacity, -1, np.int64)
+        self._free = np.arange(self.capacity - 1, -1, -1, dtype=np.int32)
+        self._n_free = self.capacity
+        self._last_use = np.zeros(self.capacity, np.int64)
+        self._admit_seq = np.zeros(self.capacity, np.int64)
+        self._pf_flag = np.zeros(self.capacity, bool)
+        self._clock = 1
         self.policy = policy
-        self.lru: "OrderedDict[int, bool]" = OrderedDict()
-        # The store owns RESIDENCY (slot_of); the RecMG structure only ranks
-        # priorities, so it gets unbounded capacity and never self-evicts —
-        # _evict_one drains its stale entries for non-resident keys.
+        # The store owns RESIDENCY (_slot_map); the RecMG structure only
+        # ranks priorities, so it gets unbounded capacity and never
+        # self-evicts — eviction drains its stale non-resident entries.
         self.recmg = RecMGBuffer(1 << 40, eviction_speed)
-        self.prefetched: set = set()
         self.fetch_us_per_row = fetch_us_per_row
         self.fetch_us_fixed = fetch_us_fixed
         self.stats = TierStats()
+        self._staged: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self.use_kernel = bool(use_kernel) and not quantize
         if quantize:
             self._gather = jax.jit(
                 lambda buf, sc, idx: buf[idx].astype(jnp.float32)
                 * sc[idx][:, None]
             )
+        elif self.use_kernel:
+            from repro.kernels.embedding_gather import gather_rows
+
+            self._gather = jax.jit(lambda buf, idx: gather_rows(buf, idx))
         else:
             self._gather = jax.jit(lambda buf, idx: buf[idx])
         self._scatter = jax.jit(
@@ -107,7 +162,214 @@ class TieredEmbeddingStore:
             lambda sc, idx, s: sc.at[idx].set(s), donate_argnums=(0,)
         )
 
+    # ---------------- compat / introspection ----------------
+
+    @property
+    def slot_of(self) -> Dict[int, int]:
+        """Dict view of key -> slot residency (seed-compatible read API)."""
+        res = np.flatnonzero(self._slot_key >= 0)
+        return {int(self._slot_key[s]): int(s) for s in res}
+
+    @property
+    def n_resident(self) -> int:
+        return self.capacity - self._n_free
+
+    def check_invariants(self):
+        """Residency invariants (used by tests): the slot map and slot->key
+        array are exact inverses and the free stack covers the rest."""
+        res = np.flatnonzero(self._slot_key >= 0)
+        keys = self._slot_key[res]
+        assert np.array_equal(self._slot_map[keys], res.astype(np.int32))
+        assert len(res) == self.capacity - self._n_free
+        assert np.count_nonzero(self._slot_map >= 0) == len(res)
+        free = self._free[: self._n_free]
+        assert np.all(self._slot_key[free] < 0)
+
+    # ---------------- slot allocation / eviction ----------------
+
+    def _alloc(self, m: int) -> np.ndarray:
+        slots = self._free[self._n_free - m: self._n_free][::-1].copy()
+        self._n_free -= m
+        return slots
+
+    def _release(self, slots: np.ndarray):
+        k = len(slots)
+        self._free[self._n_free: self._n_free + k] = slots[::-1]
+        self._n_free += k
+
+    def _evict_slots(self, victim_slots: np.ndarray):
+        """Batched eviction: clear residency + prefetch flags, free slots."""
+        vk = self._slot_key[victim_slots]
+        self._slot_map[vk] = -1
+        self._slot_key[victim_slots] = -1
+        self._pf_flag[victim_slots] = False
+        self._release(np.asarray(victim_slots, np.int32))
+
+    def _pick_victim_recmg(self) -> int:
+        victim = self.recmg.populate()
+        while victim is not None and self._slot_map[victim] < 0:
+            victim = self.recmg.populate()  # stale non-resident entry
+        if victim is None:  # priorities exhausted: oldest-admitted resident
+            res = np.flatnonzero(self._slot_key >= 0)
+            victim = int(self._slot_key[res[np.argmin(self._admit_seq[res])]])
+        return victim
+
+    def _bind(self, keys: np.ndarray, slots: np.ndarray):
+        """Point keys at slots and stamp admission order / recency."""
+        m = len(keys)
+        self._slot_map[keys] = slots
+        self._slot_key[slots] = keys
+        self._admit_seq[slots] = self._clock + np.arange(m)
+        self._last_use[slots] = self._clock + np.arange(m)
+        self._clock += m
+
+    def _admit(self, missing: np.ndarray) -> np.ndarray:
+        """Assign slots for all missing keys at once, evicting as needed.
+
+        Returns a bool mask over ``missing``: True where the key is resident
+        after the batch (False = overflow: the working set exceeded the
+        buffer, so the row is served straight from the host tier).
+        """
+        m = len(missing)
+        kept = np.ones(m, bool)
+        if self.policy == "recmg":
+            # Heap-driven victim choice is inherently sequential when
+            # evictions interleave with admissions; batch the common
+            # no-eviction case and fall back per key otherwise.
+            if m <= self._n_free:
+                slots = self._alloc(m)
+                self._bind(missing, slots)
+                self.recmg.set_priorities(missing, self.recmg.ev,
+                                          only_new=True)
+            else:
+                self._admit_recmg_sequential(missing, kept)
+            return kept
+        # ---- LRU: fully batched ----
+        if m >= self.capacity:
+            # Every old resident gets evicted, then the first m-C missing
+            # keys are themselves evicted by later ones in admit order:
+            # only the last C keys of the (sorted-unique) batch survive.
+            old = np.flatnonzero(self._slot_key >= 0)
+            if len(old):
+                self._evict_slots(old)
+            kept[: m - self.capacity] = False
+            new = missing[m - self.capacity:]
+            self._bind(new, self._alloc(self.capacity))
+            return kept
+        need = m - self._n_free
+        if need > 0:
+            res = np.flatnonzero(self._slot_key >= 0)
+            if need >= len(res):
+                victims = res
+            else:  # rank all victims in one pass
+                victims = res[np.argpartition(self._last_use[res],
+                                              need - 1)[:need]]
+            self._evict_slots(victims)
+        self._bind(missing, self._alloc(m))
+        return kept
+
+    def _admit_recmg_sequential(self, missing: np.ndarray, kept: np.ndarray):
+        """Seed-faithful per-key admission under recmg eviction pressure."""
+        slot_map, slot_key = self._slot_map, self._slot_key
+        pos = {int(k): i for i, k in enumerate(missing.tolist())}
+        for i, k in enumerate(missing.tolist()):
+            if self._n_free == 0:
+                v = self._pick_victim_recmg()
+                vs = slot_map[v]
+                slot_map[v] = -1
+                slot_key[vs] = -1
+                self._pf_flag[vs] = False
+                self._release(np.asarray([vs], np.int32))
+                j = pos.get(v)
+                if j is not None and j < i:
+                    kept[j] = False  # own-batch key evicted mid-batch
+            slot = int(self._alloc(1)[0])
+            slot_map[k] = slot
+            slot_key[slot] = k
+            self._admit_seq[slot] = self._clock
+            self._last_use[slot] = self._clock
+            self._clock += 1
+            if not self.recmg.contains(k):
+                self.recmg.set_priority(k, self.recmg.ev)
+
+    # ---------------- main path ----------------
+
+    def lookup(self, ids: np.ndarray) -> jnp.ndarray:
+        """ids: (M,) int64 -> (M, D) embeddings from the fast tier,
+        fetching misses on demand.  One vectorized pass: hit/miss partition
+        via the slot map, batched admission, single fused scatter + gather.
+        """
+        self._drain_staged()
+        ids = np.asarray(ids).ravel()
+        self.stats.batches += 1
+        self.stats.lookups += ids.size
+        uniq, inv = np.unique(ids, return_inverse=True)
+        slots_u = self._slot_map[uniq]
+        miss_mask = slots_u < 0
+        self.stats.hits += int(np.count_nonzero(~miss_mask[inv]))
+        hit_slots = slots_u[~miss_mask]
+        pf = self._pf_flag[hit_slots]
+        n_pf = int(np.count_nonzero(pf))
+        if n_pf:  # first-touch prefetch attribution
+            self.stats.prefetch_hits += n_pf
+            self._pf_flag[hit_slots] = False
+
+        missing = uniq[miss_mask]
+        if missing.size:
+            t0 = time.perf_counter()
+            rows = self.host[missing]
+            kept = self._admit(missing)
+            wkeys = missing[kept]
+            self._write_rows(self._slot_map[wkeys], rows[kept])
+            jax.block_until_ready(self.buffer)
+            self.stats.fetch_s += time.perf_counter() - t0
+            self.stats.on_demand_rows += int(missing.size)
+            self.stats.modeled_fetch_s += (
+                self.fetch_us_fixed + self.fetch_us_per_row * missing.size
+            ) * 1e-6
+            slots_u = self._slot_map[uniq]  # refresh post-admission
+
+        if self.policy == "lru":
+            # Batched touch: every resident key of this batch moves to the
+            # MRU end, ordered by sorted-unique position (seed order).
+            res = slots_u >= 0
+            rs = slots_u[res]
+            self._last_use[rs] = self._clock + np.flatnonzero(res)
+            self._clock += uniq.size
+
+        t0 = time.perf_counter()
+        # A batch whose unique working set exceeds the buffer can evict rows
+        # admitted earlier in the same batch; those overflow rows are served
+        # straight from the host tier (counted as on-demand already).
+        gather_args = (
+            (self.buffer, self.scales) if self.quantize else (self.buffer,)
+        )
+        # Pad the index vector to a power-of-two bucket: the gather shape
+        # collapses to O(log) variants, so XLA compiles once per bucket
+        # instead of once per distinct working-set size.
+        u = uniq.size
+        idx = np.zeros(_bucket(u), np.int32)
+        np.maximum(slots_u, 0, out=idx[:u], casting="unsafe")
+        out = np.asarray(self._gather(*gather_args, jnp.asarray(idx)))[:u]
+        overflow = slots_u < 0
+        if overflow.any():
+            out = out.copy()
+            out[overflow] = self.host[uniq[overflow]]
+        out = jnp.asarray(out[inv])
+        jax.block_until_ready(out)
+        self.stats.gather_s += time.perf_counter() - t0
+        return out
+
     def _write_rows(self, slots: np.ndarray, rows: np.ndarray):
+        if not len(slots):
+            return
+        # Bucket-pad the scatter like the gather: repeat the last
+        # (slot, row) pair — rewriting one slot with its own row is a
+        # no-op, and the fixed shapes keep XLA from recompiling per batch.
+        pad = _bucket(len(slots)) - len(slots)
+        if pad:
+            slots = np.concatenate((slots, np.repeat(slots[-1:], pad)))
+            rows = np.concatenate((rows, np.repeat(rows[-1:], pad, axis=0)))
         if self.quantize:
             scale = np.abs(rows).max(axis=1) / 127.0 + 1e-12
             q = np.clip(np.round(rows / scale[:, None]), -127, 127)
@@ -120,128 +382,72 @@ class TieredEmbeddingStore:
             self.buffer = self._scatter(
                 self.buffer, jnp.asarray(slots), jnp.asarray(rows))
 
-    # ---------------- policy plumbing ----------------
-
-    def _evict_one(self) -> int:
-        if self.policy == "recmg":
-            victim = self.recmg.populate()
-            while victim is not None and victim not in self.slot_of:
-                victim = self.recmg.populate()  # stale non-resident entry
-            if victim is None:  # priorities exhausted: fall back to any slot
-                victim = next(iter(self.slot_of))
-        else:
-            victim, _ = self.lru.popitem(last=False)
-        slot = self.slot_of.pop(victim)
-        self.prefetched.discard(victim)
-        return slot
-
-    def _touch(self, key: int):
-        if self.policy == "lru" and key in self.lru:
-            self.lru.move_to_end(key)
-
-    def _admit(self, keys: List[int]) -> np.ndarray:
-        """Assign slots for missing keys (evicting as needed)."""
-        slots = np.empty(len(keys), dtype=np.int32)
-        for i, k in enumerate(keys):
-            if not self.free:
-                self.free.append(self._evict_one())
-            slot = self.free.pop()
-            self.slot_of[k] = slot
-            slots[i] = slot
-            if self.policy == "recmg":
-                if not self.recmg.contains(k):
-                    self.recmg._set_priority(k, self.recmg.ev)
-            else:
-                self.lru[k] = True
-        return slots
-
-    # ---------------- main path ----------------
-
-    def lookup(self, ids: np.ndarray) -> jnp.ndarray:
-        """ids: (M,) int64 -> (M, D) embeddings from the fast tier,
-        fetching misses on demand."""
-        self.stats.batches += 1
-        self.stats.lookups += len(ids)
-        uniq, inv = np.unique(ids, return_inverse=True)
-        missing = [int(k) for k in uniq if int(k) not in self.slot_of]
-        n_hit = len(ids) - sum(
-            1 for k in ids if int(k) in missing_set
-        ) if (missing_set := set(missing)) else len(ids)
-        self.stats.hits += n_hit
-        for k in ids:
-            k = int(k)
-            if k in self.prefetched and k not in missing_set:
-                self.stats.prefetch_hits += 1
-                self.prefetched.discard(k)
-
-        if missing:
-            t0 = time.perf_counter()
-            rows = self.host[np.asarray(missing)]
-            slots = self._admit(missing)
-            self._write_rows(slots, rows)
-            jax.block_until_ready(self.buffer)
-            self.stats.fetch_s += time.perf_counter() - t0
-            self.stats.on_demand_rows += len(missing)
-            self.stats.modeled_fetch_s += (
-                self.fetch_us_fixed + self.fetch_us_per_row * len(missing)
-            ) * 1e-6
-        for k in uniq:
-            k = int(k)
-            if k in self.slot_of:
-                self._touch(k)
-
-        t0 = time.perf_counter()
-        # A batch whose unique working set exceeds the buffer can evict rows
-        # admitted earlier in the same batch; those overflow rows are served
-        # straight from the host tier (counted as on-demand already).
-        slot_arr = np.asarray(
-            [self.slot_of.get(int(k), -1) for k in uniq], np.int32
-        )
-        gather_args = (
-            (self.buffer, self.scales) if self.quantize else (self.buffer,)
-        )
-        out = np.array(self._gather(*gather_args, jnp.asarray(
-            np.maximum(slot_arr, 0))))
-        overflow = slot_arr < 0
-        if overflow.any():
-            out[overflow] = self.host[uniq[overflow]]
-        out = jnp.asarray(out[inv])
-        jax.block_until_ready(out)
-        self.stats.gather_s += time.perf_counter() - t0
-        return out
-
     # ---------------- RecMG co-management hooks ----------------
+
+    def stage_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
+                            prefetch_ids: np.ndarray):
+        """Double-buffered Algorithm 1: queue the model outputs now, apply
+        them at the next batch boundary, so the producer never blocks an
+        in-flight lookup.  Serving loops should call :meth:`flush_staged`
+        in the gap between batches (off the latency-measured path); the
+        next ``lookup`` drains any remainder as a fallback."""
+        self._staged.append((np.asarray(trunk), np.asarray(bits),
+                             np.asarray(prefetch_ids)))
+
+    def flush_staged(self):
+        """Apply all staged model outputs now (the inter-batch gap)."""
+        self._drain_staged()
+
+    def _drain_staged(self):
+        if self._staged:
+            staged, self._staged = self._staged, []
+            for trunk, bits, pf in staged:
+                self.apply_model_outputs(trunk, bits, pf)
 
     def apply_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
                             prefetch_ids: np.ndarray):
         """Algorithm 1, invoked between batches (pipelined)."""
+        trunk = np.asarray(trunk, np.int64).ravel()
+        bits = np.asarray(bits).ravel()
+        m = min(trunk.size, bits.size)  # zip semantics: shorter side wins
+        trunk, bits = trunk[:m], bits[:m]
+        pf_ids = np.asarray(prefetch_ids, np.int64).ravel()
         if self.policy != "recmg":
             # LRU+PF mode: only prefetch insertion applies.
-            pf = [int(p) for p in prefetch_ids if int(p) not in self.slot_of]
-            if pf:
+            pf = self._new_prefetch_keys(pf_ids)
+            if pf.size:
                 self._fetch_prefetch(pf)
             return
         t0 = time.perf_counter()
         # Only rank RESIDENT keys (pipelined outputs can reference vectors
         # already evicted; ranking them would desync priorities/residency).
-        pairs = [(int(k), int(b)) for k, b in zip(trunk, bits)
-                 if int(k) in self.slot_of]
-        self.recmg.load_embeddings(
-            [k for k, _ in pairs], [b for _, b in pairs], []
-        )
-        pf = [int(p) for p in prefetch_ids if int(p) not in self.slot_of]
-        if pf:
+        res = self._slot_map[trunk] >= 0
+        self.recmg.load_embeddings(trunk[res], bits[res], [])
+        pf = self._new_prefetch_keys(pf_ids)
+        if pf.size:
             self._fetch_prefetch(pf)
-            for p in pf:
-                self.recmg._set_priority(p, self.recmg.ev)
+            self.recmg.set_priorities(pf, self.recmg.ev)
         self.stats.model_s += time.perf_counter() - t0
 
-    def _fetch_prefetch(self, keys: List[int]):
-        rows = self.host[np.asarray(keys)]
-        slots = self._admit(keys)
-        self._write_rows(slots, rows)
-        for k in keys:
-            self.prefetched.add(k)
+    def _new_prefetch_keys(self, pf_ids: np.ndarray) -> np.ndarray:
+        """Non-resident prefetch targets, deduplicated, first-occurrence
+        order preserved (the seed admitted duplicates twice, leaking a
+        buffer slot per duplicate; the batched engine dedupes)."""
+        if not pf_ids.size:
+            return pf_ids
+        pf = pf_ids[self._slot_map[pf_ids] < 0]
+        if pf.size > 1:
+            _, first = np.unique(pf, return_index=True)
+            pf = pf[np.sort(first)]
+        return pf
+
+    def _fetch_prefetch(self, keys: np.ndarray):
+        rows = self.host[keys]
+        kept = self._admit(keys)
+        wkeys = keys[kept]
+        slots = self._slot_map[wkeys]
+        self._write_rows(slots, rows[kept])
+        self._pf_flag[slots] = True
 
     def modeled_batch_ms(self) -> float:
         """Analytic per-batch latency contribution of the slow tier."""

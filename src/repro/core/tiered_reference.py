@@ -1,0 +1,204 @@
+"""Per-key reference implementation of the tiered embedding store.
+
+This is the original (seed) ``TieredEmbeddingStore``: residency tracked in a
+Python dict, LRU order in an ``OrderedDict``, admission/eviction/prefetch all
+driven by per-key Python loops.  It is kept verbatim for two jobs:
+
+1. **Equivalence oracle** — ``tests/test_tiered_equivalence.py`` replays the
+   same trace through this class and the batched engine in
+   :mod:`repro.core.tiered` and asserts identical hit/miss/on-demand/prefetch
+   counters and identical returned rows.
+2. **Speedup baseline** — ``benchmarks/bench_e2e.py`` measures batched lookup
+   throughput against this implementation (the acceptance bar is >= 3x at
+   batch >= 1024 under LRU).
+
+Do not optimise this file; its value is that it stays slow and obviously
+correct.  New behavior belongs in :mod:`repro.core.tiered`.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buffer_manager import RecMGBuffer
+from repro.core.tiered import TierStats
+
+
+class ReferenceTieredStore:
+    """Host table (N, D) + device buffer (C, D), per-key bookkeeping."""
+
+    def __init__(self, host_table: np.ndarray, capacity: int,
+                 policy: str = "lru", eviction_speed: int = 4,
+                 fetch_us_per_row: float = 10.0, fetch_us_fixed: float = 30.0,
+                 quantize: bool = False):
+        self.host = host_table
+        n, d = host_table.shape
+        self.capacity = int(capacity)
+        self.quantize = quantize
+        if quantize:
+            self.buffer = jnp.zeros((self.capacity, d), jnp.int8)
+            self.scales = jnp.zeros((self.capacity,), jnp.float32)
+        else:
+            self.buffer = jnp.zeros((self.capacity, d), host_table.dtype)
+        self.slot_of: Dict[int, int] = {}
+        self.free: List[int] = list(range(self.capacity - 1, -1, -1))
+        self.policy = policy
+        self.lru: "OrderedDict[int, bool]" = OrderedDict()
+        self.recmg = RecMGBuffer(1 << 40, eviction_speed)
+        self.prefetched: set = set()
+        self.fetch_us_per_row = fetch_us_per_row
+        self.fetch_us_fixed = fetch_us_fixed
+        self.stats = TierStats()
+        if quantize:
+            self._gather = jax.jit(
+                lambda buf, sc, idx: buf[idx].astype(jnp.float32)
+                * sc[idx][:, None]
+            )
+        else:
+            self._gather = jax.jit(lambda buf, idx: buf[idx])
+        self._scatter = jax.jit(
+            lambda buf, idx, rows: buf.at[idx].set(rows),
+            donate_argnums=(0,),
+        )
+        self._scatter_sc = jax.jit(
+            lambda sc, idx, s: sc.at[idx].set(s), donate_argnums=(0,)
+        )
+
+    def _write_rows(self, slots: np.ndarray, rows: np.ndarray):
+        if self.quantize:
+            scale = np.abs(rows).max(axis=1) / 127.0 + 1e-12
+            q = np.clip(np.round(rows / scale[:, None]), -127, 127)
+            self.buffer = self._scatter(
+                self.buffer, jnp.asarray(slots), jnp.asarray(q, jnp.int8))
+            self.scales = self._scatter_sc(
+                self.scales, jnp.asarray(slots),
+                jnp.asarray(scale, jnp.float32))
+        else:
+            self.buffer = self._scatter(
+                self.buffer, jnp.asarray(slots), jnp.asarray(rows))
+
+    # ---------------- policy plumbing ----------------
+
+    def _evict_one(self) -> int:
+        if self.policy == "recmg":
+            victim = self.recmg.populate()
+            while victim is not None and victim not in self.slot_of:
+                victim = self.recmg.populate()  # stale non-resident entry
+            if victim is None:  # priorities exhausted: fall back to any slot
+                victim = next(iter(self.slot_of))
+        else:
+            victim, _ = self.lru.popitem(last=False)
+        slot = self.slot_of.pop(victim)
+        self.prefetched.discard(victim)
+        return slot
+
+    def _touch(self, key: int):
+        if self.policy == "lru" and key in self.lru:
+            self.lru.move_to_end(key)
+
+    def _admit(self, keys: List[int]) -> np.ndarray:
+        """Assign slots for missing keys (evicting as needed)."""
+        slots = np.empty(len(keys), dtype=np.int32)
+        for i, k in enumerate(keys):
+            if not self.free:
+                self.free.append(self._evict_one())
+            slot = self.free.pop()
+            self.slot_of[k] = slot
+            slots[i] = slot
+            if self.policy == "recmg":
+                if not self.recmg.contains(k):
+                    self.recmg.set_priority(k, self.recmg.ev)
+            else:
+                self.lru[k] = True
+        return slots
+
+    # ---------------- main path ----------------
+
+    def lookup(self, ids: np.ndarray) -> jnp.ndarray:
+        """ids: (M,) int64 -> (M, D) embeddings from the fast tier,
+        fetching misses on demand."""
+        self.stats.batches += 1
+        self.stats.lookups += len(ids)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        missing = [int(k) for k in uniq if int(k) not in self.slot_of]
+        n_hit = len(ids) - sum(
+            1 for k in ids if int(k) in missing_set
+        ) if (missing_set := set(missing)) else len(ids)
+        self.stats.hits += n_hit
+        for k in ids:
+            k = int(k)
+            if k in self.prefetched and k not in missing_set:
+                self.stats.prefetch_hits += 1
+                self.prefetched.discard(k)
+
+        if missing:
+            t0 = time.perf_counter()
+            rows = self.host[np.asarray(missing)]
+            slots = self._admit(missing)
+            self._write_rows(slots, rows)
+            jax.block_until_ready(self.buffer)
+            self.stats.fetch_s += time.perf_counter() - t0
+            self.stats.on_demand_rows += len(missing)
+            self.stats.modeled_fetch_s += (
+                self.fetch_us_fixed + self.fetch_us_per_row * len(missing)
+            ) * 1e-6
+        for k in uniq:
+            k = int(k)
+            if k in self.slot_of:
+                self._touch(k)
+
+        t0 = time.perf_counter()
+        slot_arr = np.asarray(
+            [self.slot_of.get(int(k), -1) for k in uniq], np.int32
+        )
+        gather_args = (
+            (self.buffer, self.scales) if self.quantize else (self.buffer,)
+        )
+        out = np.array(self._gather(*gather_args, jnp.asarray(
+            np.maximum(slot_arr, 0))))
+        overflow = slot_arr < 0
+        if overflow.any():
+            out[overflow] = self.host[uniq[overflow]]
+        out = jnp.asarray(out[inv])
+        jax.block_until_ready(out)
+        self.stats.gather_s += time.perf_counter() - t0
+        return out
+
+    # ---------------- RecMG co-management hooks ----------------
+
+    def apply_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
+                            prefetch_ids: np.ndarray):
+        """Algorithm 1, invoked between batches (pipelined)."""
+        if self.policy != "recmg":
+            pf = [int(p) for p in prefetch_ids if int(p) not in self.slot_of]
+            if pf:
+                self._fetch_prefetch(pf)
+            return
+        t0 = time.perf_counter()
+        pairs = [(int(k), int(b)) for k, b in zip(trunk, bits)
+                 if int(k) in self.slot_of]
+        self.recmg.load_embeddings(
+            [k for k, _ in pairs], [b for _, b in pairs], []
+        )
+        pf = [int(p) for p in prefetch_ids if int(p) not in self.slot_of]
+        if pf:
+            self._fetch_prefetch(pf)
+            for p in pf:
+                self.recmg.set_priority(p, self.recmg.ev)
+        self.stats.model_s += time.perf_counter() - t0
+
+    def _fetch_prefetch(self, keys: List[int]):
+        rows = self.host[np.asarray(keys)]
+        slots = self._admit(keys)
+        self._write_rows(slots, rows)
+        for k in keys:
+            self.prefetched.add(k)
+
+    def modeled_batch_ms(self) -> float:
+        """Analytic per-batch latency contribution of the slow tier."""
+        return 1e3 * self.stats.modeled_fetch_s / max(self.stats.batches, 1)

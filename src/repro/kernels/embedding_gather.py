@@ -31,6 +31,38 @@ def _gather_pool_kernel(idx_ref, table_ref, out_ref):
     out_ref[...] += table_ref[...].astype(out_ref.dtype)
 
 
+def _gather_rows_kernel(idx_ref, table_ref, out_ref):
+    out_ref[...] = table_ref[...]
+
+
+def gather_rows(table: jax.Array, idx: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """table: (N, D); idx: (M,) -> (M, D) = table[idx], no pooling.
+
+    The un-pooled gather the tiered serving buffer uses: the flat slot-index
+    vector is scalar-prefetched so ``BlockSpec.index_map`` DMAs exactly the
+    needed buffer row HBM->VMEM per grid step (same streaming layout as
+    ``gather_pool``, minus the accumulation).  D should be a multiple of 128
+    (lane width) for the non-interpret path.
+    """
+    (M,) = idx.shape
+    N, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda m, idx_ref: (idx_ref[m], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0)),
+    )
+    return pl.pallas_call(
+        _gather_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table)
+
+
 def gather_pool(table: jax.Array, idx: jax.Array, *,
                 interpret: bool = False) -> jax.Array:
     """table: (N, D); idx: (B, P) int32 -> pooled (B, D) = sum_p table[idx].

@@ -253,14 +253,26 @@ def hlo_dot_flops(hlo_text: str) -> float:
                     out_elems *= int(d)
             cm = _CONTRACT_RE.search(ln)
             cdims = [int(x) for x in cm.group(1).split(",") if x] if cm else []
-            # Resolve lhs operand shape.
+            # Resolve the lhs operand shape.  Operands may be typed
+            # ("f32[64,64]{1,0} %name") — the shape's own commas break a
+            # naive split, so match shape-then-name and prefer the inline
+            # shape over the definition map.
             oper = ln[cut + len(" dot("):]
-            lhs_name = oper.split(",")[0].split(")")[0].strip().lstrip("%")
-            if shape_map is None:
-                shape_map = _build_shape_map(lines)
+            m_op = re.match(
+                r"\s*(?:([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?\s*)?"
+                r"%?([\w.\-_]+)", oper)
+            dims = None
+            if m_op:
+                if m_op.group(2) is not None:
+                    dims = tuple(int(d) for d in m_op.group(2).split(",")
+                                 if d)
+                else:
+                    if shape_map is None:
+                        shape_map = _build_shape_map(lines)
+                    if m_op.group(3) in shape_map:
+                        dims = shape_map[m_op.group(3)][1]
             k_elems = 1
-            if lhs_name in shape_map:
-                _, dims = shape_map[lhs_name]
+            if dims:
                 for c in cdims:
                     if c < len(dims):
                         k_elems *= dims[c]

@@ -1,0 +1,88 @@
+"""Import gate for ``hypothesis``: real library when installed, otherwise a
+tiny deterministic fallback so the tier-1 suite stays green without the
+package (it is an optional dev dependency — see requirements-dev.txt).
+
+The fallback implements just the surface these tests use — ``given`` /
+``settings`` decorators, ``st.integers`` / ``st.floats`` / ``st.lists`` /
+``st.tuples``, and ``hnp.arrays`` — drawing a fixed number of random
+examples from a seeded generator.  No shrinking, no edge-case database:
+when you want real property testing, ``pip install hypothesis`` and the
+same test code picks it up unchanged.
+"""
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw  # draw(rng) -> value
+
+    class st:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, width=64, **_kw):
+            return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = int(r.integers(min_size, max_size + 1))
+                return [elements.draw(r) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda r: tuple(e.draw(r) for e in elems))
+
+    class hnp:  # noqa: N801
+        @staticmethod
+        def arrays(dtype, shape, elements=None):
+            shape = (shape,) if isinstance(shape, int) else tuple(shape)
+
+            def draw(r):
+                if elements is None:
+                    return r.normal(size=shape).astype(dtype)
+                flat = [elements.draw(r) for _ in range(int(np.prod(shape)))]
+                return np.array(flat, dtype=dtype).reshape(shape)
+            return _Strategy(draw)
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # Deterministic per-test seed; cap examples (the fallback
+                # has no shrinker, so failures replay exactly).
+                n = min(getattr(wrapper, "_max_examples", 20), 25)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+            # Strategy-filled params must not look like pytest fixtures.
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

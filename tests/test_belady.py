@@ -2,8 +2,7 @@
 label semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.belady import belady_labels, belady_sim, next_use_times
 

@@ -2,8 +2,7 @@
 must make the same victim choices as the literal O(capacity) transcription."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.buffer_manager import RecMGBuffer, SlowRecMGBuffer
 

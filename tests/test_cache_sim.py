@@ -2,8 +2,7 @@
 bookkeeping of the unified `simulate` driver."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.belady import belady_sim
 from repro.core.cache_sim import (FALRU, POLICIES, SimResult, make_cache,

@@ -3,9 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_shim import given, hnp, settings, st
 
 from repro.core.chamfer import (chamfer_bidirectional,
                                 chamfer_bidirectional_vec, chamfer_forward,

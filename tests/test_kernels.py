@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.chamfer_kernel import chamfer
-from repro.kernels.embedding_gather import gather_pool
+from repro.kernels.embedding_gather import gather_pool, gather_rows
 from repro.kernels.flash_attention import flash_attention
 
 
@@ -26,6 +26,23 @@ def test_gather_pool(N, D, B, P, dtype):
     want = ref.gather_pool_ref(table, idx)
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("N,D,M", [
+    (256, 128, 16),
+    (1000, 128, 64),
+    (64, 256, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_rows(N, D, M, dtype):
+    """Un-pooled row gather (the tiered store's device path): exact match
+    with table[idx], duplicates included."""
+    table = jax.random.normal(jax.random.PRNGKey(0), (N, D), dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (M,), 0, N)
+    idx = idx.at[0].set(idx[-1])  # force a duplicate
+    out = gather_rows(table, idx, interpret=True)
+    assert out.dtype == table.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(table[idx]))
 
 
 @pytest.mark.parametrize("B,P,W,F,block", [

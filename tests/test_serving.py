@@ -1,0 +1,133 @@
+"""Multi-table facade: routing, shared budget split, model-output routing,
+aggregated stats; plus the RecMGBuffer bulk API."""
+import numpy as np
+import pytest
+
+from repro.core.buffer_manager import RecMGBuffer, SlowRecMGBuffer
+from repro.core.serving import MultiTableTieredStore
+
+
+@pytest.fixture
+def tables():
+    rng = np.random.default_rng(0)
+    return [rng.normal(size=(n, 8)).astype(np.float32)
+            for n in (100, 50, 200)]
+
+
+def test_lookup_routes_global_ids(tables):
+    ms = MultiTableTieredStore(tables, capacity=64)
+    host = np.concatenate(tables)
+    ids = np.array([3, 120, 149, 160, 3, 349])  # all three tables + dup
+    out = np.asarray(ms.lookup(ids))
+    np.testing.assert_allclose(out, host[ids], rtol=1e-6)
+    assert ms.stats.lookups == len(ids)
+    assert ms.stats.batches == 1
+
+
+def test_budget_split_proportional(tables):
+    ms = MultiTableTieredStore(tables, capacity=70)
+    caps = [s.capacity for s in ms.stores]
+    assert sum(caps) <= 70
+    assert caps[2] > caps[0] > caps[1]  # proportional to 200/100/50 rows
+    byte_ms = MultiTableTieredStore(tables, byte_budget=70 * 8 * 4)
+    assert sum(s.capacity for s in byte_ms.stores) <= 70
+
+
+def test_capacity_never_exceeds_table(tables):
+    ms = MultiTableTieredStore(tables, capacity=10_000)
+    for s, t in zip(ms.stores, tables):
+        assert s.capacity <= t.shape[0]
+
+
+def test_budget_is_hard_despite_min_capacity_floor():
+    rng = np.random.default_rng(1)
+    tables = [rng.normal(size=(n, 8)).astype(np.float32)
+              for n in (500, 6, 6, 6, 6)]
+    ms = MultiTableTieredStore(tables, capacity=30, min_capacity=4)
+    assert sum(s.capacity for s in ms.stores) <= 30  # clawed back
+    assert all(s.capacity >= 4 for s in ms.stores)
+
+
+def test_lookup_matches_single_store_dtype(tables):
+    """Facade output dtype == what a single store returns for that table
+    (jax-canonicalized host dtype; f32 for the quantized tier)."""
+    f64 = [t.astype(np.float64) for t in tables]
+    ms = MultiTableTieredStore(f64, capacity=64)
+    single = ms.stores[0].lookup(np.array([0]))
+    assert np.asarray(ms.lookup(np.array([0, 120]))).dtype == single.dtype
+    q = MultiTableTieredStore(tables, capacity=64, quantize=True)
+    assert np.asarray(q.lookup(np.array([0]))).dtype == np.float32
+
+
+def test_model_outputs_routed_per_table(tables):
+    ms = MultiTableTieredStore(tables, capacity=64, policy="recmg")
+    # Prefetch global ids landing in tables 0 and 2.
+    ms.apply_model_outputs(np.empty(0, np.int64), np.empty(0, np.int64),
+                           np.array([5, 151, 160]))
+    assert ms.stores[0].n_resident == 1
+    assert ms.stores[1].n_resident == 0
+    assert ms.stores[2].n_resident == 2
+    out = np.asarray(ms.lookup(np.array([5, 151, 160])))
+    np.testing.assert_allclose(out, np.concatenate(tables)[[5, 151, 160]],
+                               rtol=1e-6)
+    assert ms.stats.prefetch_hits == 3
+
+
+def test_staged_outputs_routed(tables):
+    ms = MultiTableTieredStore(tables, capacity=64)
+    ms.stage_model_outputs(np.empty(0, np.int64), np.empty(0, np.int64),
+                           np.array([0, 149]))
+    assert all(s.n_resident == 0 for s in ms.stores)  # not applied yet
+    ms.lookup(np.array([0, 149]))
+    assert ms.stats.prefetch_hits == 2
+
+
+def test_per_table_hit_rates(tables):
+    ms = MultiTableTieredStore(tables, capacity=64)
+    ms.lookup(np.array([0, 1, 0, 1]))
+    ms.lookup(np.array([0, 1]))
+    rates = ms.per_table_hit_rates()
+    assert rates[0] > 0 and rates[1] == 0 and rates[2] == 0
+
+
+# ---------------- RecMGBuffer bulk API ----------------
+
+
+def test_set_priorities_matches_sequential():
+    a, b = RecMGBuffer(100), RecMGBuffer(100)
+    keys = [3, 1, 4, 1, 5]
+    for k in keys:
+        a.set_priority(k, 4)
+    b.set_priorities(keys, 4)
+    assert a.score == b.score and a.seq == b.seq
+
+
+def test_set_priorities_only_new():
+    buf = RecMGBuffer(100)
+    buf.set_priority(7, 0)
+    buf.set_priorities([7, 8], 4, only_new=True)
+    assert buf.score[7] - buf.epoch == 0  # existing entry untouched
+    assert buf.score[8] - buf.epoch == 4
+
+
+def test_fetch_many_populate_many_roundtrip():
+    buf = RecMGBuffer(4, eviction_speed=2)
+    buf.fetch_many(range(6), 2)  # overflows capacity 4 -> evicts 2
+    assert len(buf) == 4
+    victims = buf.populate_many(10)
+    assert len(victims) == 4 and len(buf) == 0
+
+
+def test_access_chunk_matches_per_access():
+    keys = np.array([1, 2, 1, 3, 4, 2, 5, 1, 6, 3] * 5, np.int64)
+    bulk = RecMGBuffer(4, eviction_speed=4)
+    ref = SlowRecMGBuffer(4, eviction_speed=4, clamp=False)
+    hits_bulk = bulk.access_chunk(keys, 4)
+    hits_ref = []
+    for k in keys.tolist():
+        h = ref.contains(k)
+        hits_ref.append(h)
+        if not h:
+            ref.fetch(k, 4)
+    assert hits_bulk.tolist() == hits_ref
+    assert set(bulk.score) == set(ref.priority)

@@ -1,8 +1,7 @@
 """Trace generator statistics, reuse-distance correctness, data pipelines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.trace import (TraceGenConfig, generate_trace,
                               reuse_distance_cdf, reuse_distances)
