@@ -2,11 +2,10 @@
 caching-policy comparisons."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import BenchContext, geomean
 from repro.core.cache_sim import make_cache, simulate
-from repro.core.recmg import precompute_outputs, run_recmg
+from repro.core.recmg import run_recmg
 from repro.core.trace import reuse_distance_cdf
 
 

@@ -40,7 +40,6 @@ def voyager_scaling(ctx: BenchContext):
     """The paper's Voyager finding: one-hot labeling over millions of
     vectors is infeasible (OOM on 512GB DDR) — quantified, plus the small-
     scale accuracy it achieves where it *does* fit."""
-    import jax
 
     from repro.core.features import make_windows
     from repro.core.voyager import (VoyagerConfig, label_memory_bytes,

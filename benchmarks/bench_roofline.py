@@ -10,7 +10,6 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BenchContext

@@ -8,10 +8,7 @@ in-process so figures share work.  ``--quick`` shrinks traces/epochs.
 """
 from __future__ import annotations
 
-import json
-import time
-from dataclasses import dataclass, field
-from pathlib import Path
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -21,9 +18,8 @@ from repro.core.caching_model import (CachingModelConfig,
                                       evaluate_caching_model,
                                       train_caching_model)
 from repro.core.features import make_windows, split_train_eval
-from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
-                                       make_prefetch_data,
-                                       train_prefetch_model)
+from repro.core.prefetch_model import (
+    PrefetchModelConfig, make_prefetch_data, train_prefetch_model)
 from repro.core.trace import Trace, TraceGenConfig, generate_trace
 
 
@@ -131,6 +127,16 @@ class BenchContext:
         if isinstance(value, float):
             value = round(value, 6)
         print(f"{bench},{name},{value},{derived}", flush=True)
+
+    def emit_percentiles(self, bench: str, prefix: str, res: dict,
+                         derived: str = ""):
+        """Emit the p50/p95/p99 per-batch latency fields a ``serve_trace``
+        result carries, so the bench trajectory tracks tail latency
+        alongside means."""
+        for q in ("p50", "p95", "p99"):
+            self.emit(bench, f"{prefix}_{q}_batch_ms",
+                      round(res[f"{q}_batch_ms"], 3),
+                      derived or f"measured per-batch wall {q}")
 
 
 def geomean(xs) -> float:

@@ -29,7 +29,7 @@ def main():
     from repro.configs import RunConfig, get_config
     from repro.core.tiered import TieredEmbeddingStore
     from repro.models.model_api import build
-    from repro.models.transformer import decode_step_embeds, init_cache
+    from repro.models.transformer import decode_step_embeds
 
     cfg = get_config(args.arch).reduced()
     run = RunConfig(attn_block_q=32, attn_block_kv=32)

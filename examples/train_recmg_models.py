@@ -27,12 +27,9 @@ def main():
                                           train_caching_model)
     from repro.core.features import make_windows, split_train_eval
     from repro.core.lstm import n_params
-    from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
-                                           decode_to_ids, init_prefetch_model,
-                                           make_prefetch_data,
-                                           predict_sequences,
-                                           sequence_metrics,
-                                           train_prefetch_model)
+    from repro.core.prefetch_model import (
+        PrefetchData, PrefetchModelConfig, decode_to_ids, make_prefetch_data,
+        predict_sequences, sequence_metrics, train_prefetch_model)
     from repro.core.prefetchers import make_prefetcher, prediction_metrics
     from repro.core.trace import TraceGenConfig, generate_trace
 
@@ -49,7 +46,6 @@ def main():
     trd, evd = split_train_eval(data)
     cparams, _ = train_caching_model(trd, mcfg, epochs=args.epochs,
                                      batch_size=512, log=print)
-    import jax
 
     print(f"caching model: {n_params(cparams)} params (paper ~37K); "
           f"accuracy {evaluate_caching_model(cparams, evd):.1%} (paper ~83%)")

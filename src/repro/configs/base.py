@@ -10,9 +10,8 @@ dtypes, sharding variant) that the perf loop iterates on.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Model config

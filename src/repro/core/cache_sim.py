@@ -13,13 +13,13 @@ the paper's Figure 14 breakdown.
 """
 from __future__ import annotations
 
-from collections import Counter, OrderedDict, defaultdict
-from dataclasses import dataclass, field
+from collections import Counter, OrderedDict
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.belady import belady_sim, next_use_times
+from repro.core.belady import belady_sim
 
 INF = np.iinfo(np.int64).max
 

@@ -9,7 +9,6 @@ prefetch_model.py.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ caching/prefetching strategy from its simulated hit rate (Fig. 19).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 

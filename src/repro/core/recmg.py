@@ -18,17 +18,15 @@ to the caching policy, hits due to prefetch, and on-demand fetches.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core.buffer_manager import RecMGBuffer
 from repro.core.cache_sim import FALRU, SimResult
-from repro.core.caching_model import (CachingModelConfig, predict_bits)
-from repro.core.features import WindowData, make_windows
-from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
-                                       decode_to_ids, make_prefetch_data,
-                                       predict_sequences)
+from repro.core.caching_model import predict_bits
+from repro.core.features import make_windows
+from repro.core.prefetch_model import decode_to_ids, predict_sequences
 from repro.core.trace import Trace
 
 

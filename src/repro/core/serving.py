@@ -53,18 +53,30 @@ class MultiTableTieredStore:
         row_bytes = (d + 4) if quantize else d * host_tables[0].dtype.itemsize
         if capacity is None:
             capacity = int(byte_budget // row_bytes)
+        if capacity < len(host_tables):
+            # Below one row per store the budget cannot be honored (stores
+            # clamp to capacity >= 1); fail loudly instead of overrunning.
+            raise ValueError(
+                f"budget of {capacity} rows cannot give {len(host_tables)} "
+                "tables one row each")
         w = np.asarray(weights if weights is not None else rows, np.float64)
-        caps = np.maximum(min_capacity,
+        # The per-table floor must never be allowed to overrun the shared
+        # budget: when the budget cannot afford ``min_capacity`` rows for
+        # every table, the effective floor drops to an equal split (at
+        # least one row — the irreducible store minimum).
+        floor = max(1, min(int(min_capacity), capacity // len(host_tables)))
+        caps = np.maximum(floor,
                           np.floor(capacity * w / w.sum())).astype(np.int64)
         caps = np.minimum(caps, rows)  # never exceed the table itself
-        # Lifting small tables to min_capacity can overrun the shared
-        # budget; claw the excess back from the largest stores (down to the
-        # floor).  Only when capacity < n_tables * min_capacity does the
-        # floor win over the budget.
+        # Lifting small tables to the floor can still overrun the budget;
+        # claw the excess back from the largest stores (down to the
+        # floor), largest-first — deterministic, and with the effective
+        # floor above this always converges to ``sum(caps) <= capacity``
+        # whenever ``capacity >= n_tables``.
         excess = int(caps.sum() - capacity)
         while excess > 0:
             i = int(np.argmax(caps))
-            take = min(excess, int(caps[i]) - min_capacity)
+            take = min(excess, int(caps[i]) - floor)
             if take <= 0:
                 break
             caps[i] -= take
@@ -107,6 +119,16 @@ class MultiTableTieredStore:
         gid = np.asarray(global_ids, np.int64).ravel()
         table = np.searchsorted(self.offsets, gid, side="right") - 1
         return gid, table, gid - self.offsets[table]
+
+    def resident_mask(self, global_ids: np.ndarray) -> np.ndarray:
+        """Vectorized residency probe across all per-table stores (the
+        serving runtime's cancel-before-issue hook)."""
+        gid, table, local = self._route(global_ids)
+        mask = np.zeros(len(gid), bool)
+        for t in np.unique(table).tolist():
+            m = table == t
+            mask[m] = self.stores[t].resident_mask(local[m])
+        return mask
 
     # ---------------- single-store-compatible API ----------------
 

@@ -67,6 +67,7 @@ class TierStats:
     hits: int = 0
     prefetch_hits: int = 0
     on_demand_rows: int = 0
+    evictions: int = 0
     fetch_s: float = 0.0  # measured host->device copy time
     gather_s: float = 0.0  # device gather time
     model_s: float = 0.0  # CPU-side model inference time (off critical path)
@@ -82,6 +83,7 @@ class TierStats:
             "hit_rate": round(self.hit_rate, 4),
             "prefetch_hits": self.prefetch_hits,
             "on_demand_rows": self.on_demand_rows,
+            "evictions": self.evictions,
             "fetch_s": round(self.fetch_s, 4),
             "gather_s": round(self.gather_s, 4),
             "model_s": round(self.model_s, 4),
@@ -91,7 +93,7 @@ class TierStats:
     def merge(self, other: "TierStats") -> "TierStats":
         """Aggregate (for the multi-table facade)."""
         for f in ("batches", "lookups", "hits", "prefetch_hits",
-                  "on_demand_rows"):
+                  "on_demand_rows", "evictions"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for f in ("fetch_s", "gather_s", "model_s", "modeled_fetch_s"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
@@ -174,6 +176,12 @@ class TieredEmbeddingStore:
     def n_resident(self) -> int:
         return self.capacity - self._n_free
 
+    def resident_mask(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized residency probe: True where ``ids`` are in the fast
+        tier right now (public API for the serving runtime's cancel-
+        before-issue and for tests; does not touch recency state)."""
+        return self._slot_map[np.asarray(ids, np.int64).ravel()] >= 0
+
     def check_invariants(self):
         """Residency invariants (used by tests): the slot map and slot->key
         array are exact inverses and the free stack covers the rest."""
@@ -203,6 +211,7 @@ class TieredEmbeddingStore:
         self._slot_map[vk] = -1
         self._slot_key[victim_slots] = -1
         self._pf_flag[victim_slots] = False
+        self.stats.evictions += len(victim_slots)
         self._release(np.asarray(victim_slots, np.int32))
 
     def _pick_victim_recmg(self) -> int:
@@ -253,6 +262,9 @@ class TieredEmbeddingStore:
             if len(old):
                 self._evict_slots(old)
             kept[: m - self.capacity] = False
+            # The seed admitted those m-C keys and then evicted each one;
+            # count them so the eviction stat matches the reference.
+            self.stats.evictions += m - self.capacity
             new = missing[m - self.capacity:]
             self._bind(new, self._alloc(self.capacity))
             return kept
@@ -279,6 +291,7 @@ class TieredEmbeddingStore:
                 slot_map[v] = -1
                 slot_key[vs] = -1
                 self._pf_flag[vs] = False
+                self.stats.evictions += 1
                 self._release(np.asarray([vs], np.int32))
                 j = pos.get(v)
                 if j is not None and j < i:

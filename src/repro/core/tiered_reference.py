@@ -95,6 +95,7 @@ class ReferenceTieredStore:
             victim, _ = self.lru.popitem(last=False)
         slot = self.slot_of.pop(victim)
         self.prefetched.discard(victim)
+        self.stats.evictions += 1
         return slot
 
     def _touch(self, key: int):

@@ -16,12 +16,10 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from repro.core import lstm as LS
 from repro.core.features import ROW_BUCKETS, WindowData

@@ -9,7 +9,6 @@ the HLO shows the reduced payload (the §Perf collective-term knob).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -25,7 +25,6 @@ from pathlib import Path
 from typing import Callable, List, Optional
 
 import jax
-import numpy as np
 
 
 def retry_step(fn: Callable, *args, retries: int = 3, backoff_s: float = 0.5,

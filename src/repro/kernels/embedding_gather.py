@@ -13,7 +13,6 @@ back once (TPU grids are sequential, revisited blocks are kept live).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.chamfer_kernel import chamfer as _chamfer_pallas

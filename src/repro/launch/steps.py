@@ -3,13 +3,11 @@ steps, shared by the real launcher and the dry-run."""
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.models.model_api import ModelBundle
 from repro.optim.adamw import OptConfig, apply_updates, init_opt
 

@@ -12,13 +12,10 @@ compression.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import time
 from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import RunConfig, get_config
@@ -28,8 +25,8 @@ from repro.distributed.fault_tolerance import (ElasticMesh, Heartbeat,
 from repro.launch.steps import make_train_step, opt_struct_and_specs
 from repro.models.model_api import build
 from repro.optim.adamw import OptConfig, init_opt
-from repro.sharding.partition import (activation_sharding, batch_pspecs,
-                                      param_pspecs, to_shardings)
+from repro.sharding.partition import (
+    activation_sharding, param_pspecs, to_shardings)
 
 
 def main(argv=None):

@@ -17,10 +17,8 @@ sequences, 314B params):
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

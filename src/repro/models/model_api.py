@@ -5,7 +5,6 @@ Everything the launcher, dry-run, tests and benchmarks need goes through
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable, Dict, Optional

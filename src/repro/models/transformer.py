@@ -11,7 +11,6 @@ body.  Three entry points:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -7,9 +7,7 @@ parameter dtype, so bf16 params train stably without a separate master copy
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

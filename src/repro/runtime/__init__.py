@@ -1,0 +1,16 @@
+"""Asynchronous pipelined serving runtime (background prefetch engine,
+micro-batching request pipeline, telemetry).  See docs/architecture.md
+("Serving runtime") for the determinism contract."""
+from repro.runtime.clock import Clock, VirtualClock, WallClock
+from repro.runtime.pipeline import (MicroBatcher, PipelinedRuntime, Request,
+                                    RuntimeConfig)
+from repro.runtime.prefetch_engine import (PrefetchEngine,
+                                           heuristic_prediction_stream)
+from repro.runtime.telemetry import RuntimeTelemetry, latency_percentiles
+
+__all__ = [
+    "Clock", "VirtualClock", "WallClock",
+    "MicroBatcher", "PipelinedRuntime", "Request", "RuntimeConfig",
+    "PrefetchEngine", "heuristic_prediction_stream",
+    "RuntimeTelemetry", "latency_percentiles",
+]

@@ -1,0 +1,245 @@
+"""Micro-batching request pipeline with a double-buffered fetch/compute
+timeline.
+
+Requests (one query's embedding ids each) enter an **admission queue**;
+a size/deadline **micro-batcher** closes a batch when ``max_batch``
+requests are waiting or the oldest has waited ``deadline_us``.  Batches
+then flow through a two-stage pipeline modeled on the paper's deployment
+(Fig. 6): the *host* stage drains staged model outputs, runs the tiered
+lookup and pays the slow-tier on-demand fetch; the *device* stage runs the
+dense forward.  With ``pipeline_depth >= 2`` the host may run ahead of the
+device, so batch *k*'s slow-tier fetch overlaps batch *k-1*'s dense
+forward — the fetch only **stalls** the device for the part that outlasts
+the overlap window:
+
+    host_start[k]   = max(host_free, close[k], compute_done[k - depth])
+    fetch_done[k]   = host_start[k] + fetch_us[k]
+    compute_start[k]= max(fetch_done[k], compute_done[k-1])
+    stall[k]        = max(0, fetch_done[k] - max(compute_done[k-1],
+                                                 host_start[k]))
+
+``pipeline_depth=1`` degenerates to the synchronous runtime
+(``stall == demand fetch``, exactly the store's ``modeled_fetch_s``).
+
+Determinism contract: with the inline scheduler and a
+:class:`~repro.runtime.clock.VirtualClock`, the store sees *exactly* the
+same sequence of drains, lookups and model-output applications as the
+synchronous serving loop — hit/miss/eviction counters reproduce
+byte-for-byte — while the timeline above moves fetch time off the modeled
+critical path.  Only the accounting changes, never the residency math.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.clock import Clock, VirtualClock
+from repro.runtime.prefetch_engine import PrefetchEngine
+from repro.runtime.telemetry import RuntimeTelemetry
+
+
+@dataclass
+class Request:
+    """One inference query's embedding-id vector."""
+
+    rid: int
+    ids: np.ndarray
+    arrival_us: float = 0.0
+
+
+@dataclass
+class RuntimeConfig:
+    max_batch: int = 32              # micro-batcher size trigger (queries)
+    deadline_us: float = float("inf")  # micro-batcher age trigger
+    pipeline_depth: int = 2          # host may run this many batches ahead
+    interarrival_us: float = 0.0     # >0: open-loop arrivals at this rate
+    fetch_us_per_row: float = 10.0   # slow-tier cost model (matches store)
+    fetch_us_fixed: float = 30.0
+    compute_us: Optional[float] = None  # None: use measured compute
+    scheduler: str = "inline"        # "inline" (deterministic) | "thread"
+    max_queue: int = 64              # prefetch work-queue bound
+    coalesce_rows: int = 4096        # populate coalescing cap
+
+    def __post_init__(self):
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+
+
+class MicroBatcher:
+    """Size/deadline micro-batcher over an admission queue."""
+
+    def __init__(self, max_batch: int, deadline_us: float = float("inf")):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = int(max_batch)
+        self.deadline_us = float(deadline_us)
+        self._queue: List[Request] = []
+
+    def __len__(self):
+        return len(self._queue)
+
+    @property
+    def oldest_arrival_us(self) -> float:
+        return self._queue[0].arrival_us if self._queue else float("inf")
+
+    def push(self, req: Request):
+        self._queue.append(req)
+
+    def ready(self, now_us: float) -> bool:
+        """A batch should close: full, or the oldest request timed out."""
+        if len(self._queue) >= self.max_batch:
+            return True
+        return bool(self._queue) and \
+            now_us - self.oldest_arrival_us >= self.deadline_us
+
+    def pop(self) -> Tuple[List[Request], float]:
+        """Close one batch; returns (requests, close time).  A full batch
+        closes when its last member arrived; a deadline batch when the
+        oldest request's patience ran out."""
+        take, self._queue = (self._queue[: self.max_batch],
+                             self._queue[self.max_batch:])
+        if len(take) == self.max_batch:
+            close = max(r.arrival_us for r in take)
+        else:
+            close = take[0].arrival_us + self.deadline_us
+        return take, close
+
+    def flush(self) -> Tuple[List[Request], float]:
+        """End-of-stream: close whatever is waiting at its last arrival."""
+        take, self._queue = self._queue[: self.max_batch], \
+            self._queue[self.max_batch:]
+        return take, max(r.arrival_us for r in take)
+
+
+class PipelinedRuntime:
+    """Asynchronous pipelined serving runtime over a tiered store.
+
+    Drives ``store.lookup`` through the micro-batcher and the modeled
+    double-buffered timeline, with the :class:`PrefetchEngine` applying
+    staged model outputs at deterministic drain points (inline scheduler)
+    or on the background worker (thread scheduler).
+    """
+
+    def __init__(self, store, cfg: Optional[RuntimeConfig] = None,
+                 clock: Optional[Clock] = None):
+        self.store = store
+        self.cfg = cfg or RuntimeConfig()
+        self.clock = clock or VirtualClock()
+        self.telemetry = RuntimeTelemetry()
+        self.engine = PrefetchEngine(
+            store, telemetry=self.telemetry, clock=self.clock,
+            scheduler=self.cfg.scheduler, max_queue=self.cfg.max_queue,
+            coalesce_rows=self.cfg.coalesce_rows,
+            fetch_us_per_row=self.cfg.fetch_us_per_row,
+            fetch_us_fixed=self.cfg.fetch_us_fixed)
+        self.batcher = MicroBatcher(self.cfg.max_batch, self.cfg.deadline_us)
+        # ---- modeled timeline state ----
+        self._host_free_us = 0.0
+        self._compute_done_us: List[float] = []   # per finished batch
+        self._batch_index = 0
+        self._next_rid = 0
+        self.wall_batch_s: List[float] = []       # measured, per batch
+
+    # ---------------- request admission ----------------
+
+    def _arrival(self) -> float:
+        if self.cfg.interarrival_us > 0:
+            return self._next_rid * self.cfg.interarrival_us
+        return 0.0  # closed loop: latency measured from admission
+
+    def submit(self, ids: np.ndarray) -> Request:
+        req = Request(self._next_rid, np.asarray(ids, np.int64).ravel(),
+                      self._arrival())
+        self._next_rid += 1
+        self.batcher.push(req)
+        return req
+
+    # ---------------- pipeline core ----------------
+
+    def run(self, id_stream: Iterable[np.ndarray],
+            step_fn: Callable[[int, object], Tuple[float, List[tuple]]]):
+        """Serve a stream of per-query id vectors end to end.
+
+        ``step_fn(batch_index, embeddings) -> (compute_seconds, staged)``
+        runs the dense forward for one closed batch and returns its
+        measured compute time plus the list of ``(trunk, bits,
+        prefetch_ids)`` model outputs to stage for later batches.
+        """
+        for ids in id_stream:
+            arrival = self._arrival()
+            # A waiting partial batch whose deadline expires before this
+            # request arrives must close without it.
+            while self.batcher.ready(arrival):
+                reqs, close = self.batcher.pop()
+                self._process(reqs, close, step_fn)
+            self.submit(ids)
+            while len(self.batcher) >= self.batcher.max_batch:
+                reqs, close = self.batcher.pop()
+                self._process(reqs, close, step_fn)
+        while len(self.batcher):
+            reqs, close = self.batcher.flush()
+            self._process(reqs, close, step_fn)
+        self.engine.close()
+        return self.telemetry
+
+    def _process(self, reqs: List[Request], close_us: float, step_fn):
+        cfg, tel = self.cfg, self.telemetry
+        b = self._batch_index
+        done = self._compute_done_us
+        prev_done = done[-1] if done else 0.0
+        # Back-pressure: at depth d the host may only run while batch
+        # b-d's output buffer has been consumed (double buffering at d=2).
+        gate = done[b - cfg.pipeline_depth] if b >= cfg.pipeline_depth \
+            else 0.0
+        host_start = max(self._host_free_us, close_us, gate)
+
+        ids = np.concatenate([r.ids for r in reqs])
+        self.engine.observe_demand(np.unique(ids), host_start)
+        if cfg.scheduler == "inline":
+            self.engine.drain()  # the deterministic pre-lookup drain point
+        pre_fetch_s = self.store.stats.modeled_fetch_s
+        # Wall timing covers lookup + the reported forward time only, so
+        # the measured window matches the synchronous loop, which stages,
+        # packages and flushes model outputs outside its timed window.
+        t_wall = time.perf_counter()
+        with self.engine.lock:
+            emb = self.store.lookup(ids)
+        lookup_wall_s = time.perf_counter() - t_wall
+        fetch_us = (self.store.stats.modeled_fetch_s - pre_fetch_s) * 1e6
+
+        fetch_done = host_start + fetch_us
+        stall = max(0.0, fetch_done - max(prev_done, host_start))
+        compute_start = max(fetch_done, prev_done)
+
+        compute_s, staged = step_fn(b, emb)
+        compute_us = cfg.compute_us if cfg.compute_us is not None \
+            else compute_s * 1e6
+        compute_done = compute_start + compute_us
+        self.wall_batch_s.append(lookup_wall_s + compute_s)
+
+        # ---- bookkeeping ----
+        tel.batches += 1
+        tel.requests += len(reqs)
+        tel.demand_fetch_ms += fetch_us * 1e-3
+        tel.stall_ms += stall * 1e-3
+        tel.compute_ms += compute_us * 1e-3
+        for r in reqs:
+            arrive = r.arrival_us if cfg.interarrival_us > 0 else host_start
+            tel.latencies_us.append(compute_done - arrive)
+        self._host_free_us = fetch_done
+        done.append(compute_done)
+        self._batch_index = b + 1
+        if hasattr(self.clock, "advance_to"):
+            self.clock.advance_to(compute_done)
+        # Stage the model outputs this batch produced (the CPU models run
+        # pipelined during the batch; their outputs land afterwards).
+        for trunk, bits, pf in staged:
+            self.engine.submit(trunk, bits, pf, now_us=compute_done)
+
+    # ---------------- results ----------------
+
+    def results(self) -> dict:
+        return self.telemetry.as_dict()

@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 STACKED_KEYS = ("blocks", "enc_blocks", "dec_blocks")

@@ -15,6 +15,8 @@ import zlib
 
 import numpy as np
 
+__all__ = ["given", "settings", "st", "hnp", "HAVE_HYPOTHESIS"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

@@ -1,7 +1,6 @@
 """Belady MIN: exact optimality vs brute force (hypothesis property test) and
 label semantics."""
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.belady import belady_labels, belady_sim, next_use_times

@@ -1,7 +1,5 @@
 """RecMG buffer (Algorithms 1 & 2): the O(log n) epoch-trick implementation
 must make the same victim choices as the literal O(capacity) transcription."""
-import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.buffer_manager import RecMGBuffer, SlowRecMGBuffer

@@ -1,12 +1,10 @@
 """Cache-policy simulators: behavioral invariants + the Fig.14 attribution
 bookkeeping of the unified `simulate` driver."""
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.belady import belady_sim
-from repro.core.cache_sim import (FALRU, POLICIES, SimResult, make_cache,
-                                  simulate)
+from repro.core.cache_sim import FALRU, POLICIES, make_cache, simulate
 from repro.core.prefetchers import Prefetcher
 
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_shim import given, hnp, settings, st
 
 from repro.core.chamfer import (chamfer_bidirectional,

@@ -1,6 +1,5 @@
 """Checkpoint: atomic save/restore, async writer, retention, resume."""
 import json
-import threading
 from pathlib import Path
 
 import jax

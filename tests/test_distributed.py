@@ -1,5 +1,4 @@
 """Gradient compression + fault-tolerance utilities."""
-import time
 
 import jax
 import jax.numpy as jnp

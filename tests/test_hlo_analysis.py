@@ -2,8 +2,6 @@
 against both crafted text and a real compiled scan."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import (analyze, collective_stats,
                                        computation_multipliers,

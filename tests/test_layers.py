@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import ModelConfig
 from repro.models import layers as L
 
 

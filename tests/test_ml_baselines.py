@@ -1,7 +1,5 @@
 """Voyager-lite and Mockingjay-lite (the paper's remaining baselines)."""
-import jax
 import numpy as np
-import pytest
 
 from repro.core.cache_sim import MockingjayLite, make_cache, simulate
 from repro.core.features import make_windows

@@ -1,6 +1,5 @@
 """Optimizer + train-step: convergence, clipping, microbatch equivalence,
 checkpoint/restart through the real launcher."""
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -8,10 +7,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.base import RunConfig
 from repro.launch.steps import make_train_step
 from repro.models.model_api import build
-from repro.optim.adamw import OptConfig, apply_updates, global_norm, init_opt
+from repro.optim.adamw import OptConfig, apply_updates, init_opt
 
 
 def test_adamw_converges_quadratic():

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.perf_model import LinearPerfModel, fit_perf_model
+from repro.core.perf_model import fit_perf_model
 
 
 def test_exact_recovery():

@@ -3,11 +3,10 @@ dispatch, row-sharded DLRM lookup, sharding variants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.sharding import partition as sp
 

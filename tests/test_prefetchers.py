@@ -59,3 +59,53 @@ def test_berti_learns_local_delta():
     pf = BertiLite(pc_of=lambda k: 0)
     res = simulate(keys, FALRU(32), pf)
     assert res.prefetch_issued > 100
+
+
+# ---------------- prediction_metrics (Eq. 2 / Figs. 9-10) ----------------
+
+
+class _PlusOne:
+    """Predicts exactly the next key of an ascending stream."""
+
+    def on_access(self, key, hit):
+        return [key + 1]
+
+
+class _HalfWrong:
+    """One good guess (key+1) and one always-wrong guess per access."""
+
+    def on_access(self, key, hit):
+        return [key + 1, key + 1000]
+
+
+class _Silent:
+    def on_access(self, key, hit):
+        return []
+
+
+def test_prediction_metrics_perfect_hand_computed():
+    """On keys 0..11 with window 3, a +1 predictor issues [i+1, i+2, i+3]
+    per window — every prediction lands in the next-3 ground truth, and
+    every ground-truth key is covered: correctness = coverage = 1."""
+    m = prediction_metrics(np.arange(12), _PlusOne(), window=3)
+    assert m["issued"] == 9  # 3 windows (i = 0, 3, 6) x 3 predictions
+    assert m["correctness"] == pytest.approx(1.0)
+    assert m["coverage"] == pytest.approx(1.0)
+
+
+def test_prediction_metrics_half_wrong_hand_computed():
+    """The half-wrong predictor issues [i+1, i+1000, i+2, ...] per window,
+    truncated to the window size 3: of those, 2 land in the future set of
+    3 -> correctness 2/3; 2 of 3 ground-truth keys covered -> coverage
+    2/3."""
+    m = prediction_metrics(np.arange(12), _HalfWrong(), window=3)
+    assert m["issued"] == 9
+    assert m["correctness"] == pytest.approx(2 / 3)
+    assert m["coverage"] == pytest.approx(2 / 3)
+
+
+def test_prediction_metrics_silent_prefetcher():
+    m = prediction_metrics(np.arange(30), _Silent(), window=5)
+    assert m["issued"] == 0
+    assert m["correctness"] == 0.0  # guarded division
+    assert m["coverage"] == 0.0

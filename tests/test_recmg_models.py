@@ -12,11 +12,10 @@ from repro.core.caching_model import (CachingModelConfig,
 from repro.core.cache_sim import FALRU, simulate
 from repro.core.features import make_windows, split_train_eval
 from repro.core.lstm import n_params
-from repro.core.prefetch_model import (PrefetchData, PrefetchModelConfig,
-                                       init_prefetch_model,
-                                       make_prefetch_data, predict_sequences,
-                                       train_prefetch_model)
-from repro.core.recmg import RecMGOutputs, precompute_outputs, run_recmg
+from repro.core.prefetch_model import (
+    PrefetchModelConfig, init_prefetch_model, make_prefetch_data,
+    predict_sequences, train_prefetch_model)
+from repro.core.recmg import precompute_outputs, run_recmg
 
 
 @pytest.fixture(scope="module")

@@ -131,3 +131,55 @@ def test_access_chunk_matches_per_access():
             ref.fetch(k, 4)
     assert hits_bulk.tolist() == hits_ref
     assert set(bulk.score) == set(ref.priority)
+
+
+def test_byte_budget_hard_with_many_tiny_tables():
+    """Regression (min-capacity edge): lifting many tiny tables to
+    ``min_capacity`` must never overrun the shared byte budget — the
+    effective floor drops to an equal split when the budget is tight."""
+    rng = np.random.default_rng(2)
+    d = 8
+    tables = [rng.normal(size=(6, d)).astype(np.float32) for _ in range(10)]
+    row_bytes = d * 4
+    byte_budget = 12 * row_bytes  # 12 rows for 10 tables; floor 4 wants 40
+    ms = MultiTableTieredStore(tables, byte_budget=byte_budget,
+                               min_capacity=4)
+    assert sum(s.capacity for s in ms.stores) * ms.row_bytes <= byte_budget
+    assert all(s.capacity >= 1 for s in ms.stores)
+    # Sanity: lookups across every table still work at the tiny budget.
+    ids = np.arange(0, 60, 6)
+    out = np.asarray(ms.lookup(ids))
+    np.testing.assert_allclose(out, np.concatenate(tables)[ids], rtol=1e-6)
+
+
+def test_row_budget_hard_with_many_tiny_tables():
+    rng = np.random.default_rng(3)
+    tables = [rng.normal(size=(6, 8)).astype(np.float32) for _ in range(9)]
+    ms = MultiTableTieredStore(tables, capacity=13, min_capacity=4)
+    assert sum(s.capacity for s in ms.stores) <= 13
+    assert all(s.capacity >= 1 for s in ms.stores)
+
+
+def test_min_capacity_floor_honored_when_budget_allows():
+    """With a roomy budget the configured floor still wins (no behavior
+    change for the non-degenerate case)."""
+    rng = np.random.default_rng(4)
+    tables = [rng.normal(size=(n, 8)).astype(np.float32)
+              for n in (500, 6, 6, 6, 6)]
+    ms = MultiTableTieredStore(tables, capacity=30, min_capacity=4)
+    assert sum(s.capacity for s in ms.stores) <= 30
+    assert all(s.capacity >= 4 for s in ms.stores)
+
+
+def test_facade_resident_mask_routes_tables(tables):
+    ms = MultiTableTieredStore(tables, capacity=64)
+    ms.lookup(np.array([3, 120, 160]))  # one id in each table
+    mask = ms.resident_mask(np.array([3, 4, 120, 160, 200]))
+    assert mask.tolist() == [True, False, True, True, False]
+
+
+def test_budget_below_one_row_per_table_raises():
+    rng = np.random.default_rng(5)
+    tables = [rng.normal(size=(6, 8)).astype(np.float32) for _ in range(10)]
+    with pytest.raises(ValueError, match="one row each"):
+        MultiTableTieredStore(tables, capacity=5)

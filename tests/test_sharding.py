@@ -2,11 +2,10 @@
 cache specs — validated on a small host mesh."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.models.model_api import build
 from repro.sharding import partition as sp
 

@@ -1,10 +1,9 @@
 """End-to-end system behaviour: the full RecMG pipeline (trace -> Belady
 labels -> train both models -> co-managed buffer) reduces on-demand fetches
 vs the production LRU baseline — the paper's headline claim, at test scale."""
-import numpy as np
 import pytest
 
-from repro.core.belady import belady_labels, belady_sim
+from repro.core.belady import belady_labels
 from repro.core.cache_sim import FALRU, SALRU, simulate
 from repro.core.caching_model import CachingModelConfig, train_caching_model
 from repro.core.features import make_windows

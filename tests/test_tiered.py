@@ -106,3 +106,51 @@ def test_quantized_store_roundtrip(host):
     st.lookup(np.arange(40))
     out2 = np.asarray(st.lookup(np.array([0])))
     assert np.abs(out2 - host[[0]]).max() / np.abs(host).max() < 0.02
+
+
+def test_tierstats_merge_additive():
+    """TierStats.merge: counter additivity and the merged hit rate."""
+    from repro.core.tiered import TierStats
+
+    a = TierStats(batches=2, lookups=10, hits=4, prefetch_hits=1,
+                  on_demand_rows=6, evictions=3, fetch_s=0.5, gather_s=0.25,
+                  model_s=0.125, modeled_fetch_s=1.0)
+    b = TierStats(batches=3, lookups=30, hits=24, prefetch_hits=2,
+                  on_demand_rows=6, evictions=5, fetch_s=0.5, gather_s=0.75,
+                  model_s=0.375, modeled_fetch_s=0.5)
+    out = a.merge(b)
+    assert out is a  # merges in place and returns self
+    assert (a.batches, a.lookups, a.hits) == (5, 40, 28)
+    assert (a.prefetch_hits, a.on_demand_rows, a.evictions) == (3, 12, 8)
+    assert a.fetch_s == pytest.approx(1.0)
+    assert a.gather_s == pytest.approx(1.0)
+    assert a.model_s == pytest.approx(0.5)
+    assert a.modeled_fetch_s == pytest.approx(1.5)
+    # Merged hit rate is recomputed from merged counters, not averaged:
+    # (4 + 24) / (10 + 30), not mean(0.4, 0.8).
+    assert a.hit_rate == pytest.approx(28 / 40)
+    assert a.as_dict()["evictions"] == 8
+
+
+def test_tierstats_merge_identity():
+    from repro.core.tiered import TierStats
+
+    a = TierStats(batches=1, lookups=5, hits=2)
+    a.merge(TierStats())
+    assert (a.batches, a.lookups, a.hits) == (1, 5, 2)
+    assert TierStats().merge(TierStats()).hit_rate == 0.0
+
+
+def test_eviction_counter(host):
+    store = TieredEmbeddingStore(host, capacity=8, policy="lru")
+    store.lookup(np.arange(8))
+    assert store.stats.evictions == 0
+    store.lookup(np.arange(8, 12))  # 4 admissions force 4 evictions
+    assert store.stats.evictions == 4
+
+
+def test_resident_mask(host):
+    store = TieredEmbeddingStore(host, capacity=8, policy="lru")
+    store.lookup(np.array([1, 2, 3]))
+    mask = store.resident_mask(np.array([1, 2, 3, 4]))
+    assert mask.tolist() == [True, True, True, False]

@@ -11,7 +11,8 @@ import pytest
 from repro.core.tiered import TieredEmbeddingStore
 from repro.core.tiered_reference import ReferenceTieredStore
 
-COUNTERS = ("batches", "lookups", "hits", "prefetch_hits", "on_demand_rows")
+COUNTERS = ("batches", "lookups", "hits", "prefetch_hits", "on_demand_rows",
+            "evictions")
 
 
 def _trace(rng, n_rows, n_acc, zipf_a=1.2):

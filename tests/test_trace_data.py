@@ -1,6 +1,5 @@
 """Trace generator statistics, reuse-distance correctness, data pipelines."""
 import numpy as np
-import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.core.trace import (TraceGenConfig, generate_trace,
