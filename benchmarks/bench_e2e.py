@@ -272,6 +272,43 @@ def runtime_pipeline(ctx: BenchContext, cfg, tr, cap, outputs, sync_res):
     return red
 
 
+def sharded_placements(ctx: BenchContext, n_shards: int = 4):
+    """Sharded multi-worker serving, one row set per placement policy:
+    hit rate, tail latency, max-shard load imbalance, and the parallel
+    critical-path fetch (workers fetch concurrently, the batch pays the
+    slowest shard).  The RecShard-style ``freq`` planner should match or
+    beat the monolithic hit rate; ``row``/``hash`` should pin imbalance
+    near 1.0."""
+    from repro.sharding.embedding_shard import PLACEMENTS
+
+    cfg, tr = _serving_cfg(ctx)
+    params = init_dlrm(jax.random.PRNGKey(0), cfg)
+    cap = int(0.18 * tr.unique_count())
+    short = tr.slice(0, 40_000)
+    mono = serve_trace(cfg, params, short, cap, "lru", None,
+                       batch_queries=32)
+    ctx.emit("sharded", "mono_hit_rate", mono["hit_rate"],
+             f"single worker, {cap}-row budget")
+    for placement in PLACEMENTS:
+        res = serve_trace(cfg, params, short, cap, "lru", None,
+                          batch_queries=32, shards=n_shards,
+                          placement=placement)
+        sh = res["shard"]
+        ctx.emit("sharded", f"{placement}_hit_rate", res["hit_rate"],
+                 f"{n_shards} workers")
+        ctx.emit("sharded", f"{placement}_load_imbalance",
+                 sh["load_imbalance"],
+                 f"max/mean shard load (worst batch "
+                 f"{sh['max_batch_imbalance']})")
+        ctx.emit("sharded", f"{placement}_fetch_ms_critical",
+                 round(sh["modeled_fetch_ms_critical"]
+                       / max(res["batches"], 1), 3),
+                 f"slowest-shard path; sum view "
+                 f"{res['modeled_fetch_ms_per_batch']:.3f}, parallel "
+                 f"speedup {sh['parallel_fetch_speedup']}")
+        ctx.emit_percentiles("sharded", placement, res)
+
+
 def run(ctx: BenchContext):
     lookup_throughput(ctx)
     cfg, tr, cap, results, out_full = fig16_17_e2e(ctx)
@@ -279,3 +316,4 @@ def run(ctx: BenchContext):
     fig18_19_perf_model(ctx)
     quantized_buffer_beyond_paper(ctx)
     multi_table_facade(ctx)
+    sharded_placements(ctx)

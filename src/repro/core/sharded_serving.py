@@ -1,0 +1,264 @@
+"""Sharded multi-worker tiered serving: N simulated workers, one batched
+tiered store (+ inline prefetch engine) each, all-to-all-style gather.
+
+:class:`ShardedTieredStore` executes a
+:class:`~repro.sharding.embedding_shard.ShardPlan`: every worker owns the
+host-tier rows the plan assigned to it (a zero-copy-ordered slice of the
+global table) and a fast-tier buffer sized by the plan's per-shard budget.
+A batch of global ids is routed shard-locally in one vectorized pass
+(``plan.route``), each touched shard runs one batched
+:class:`~repro.core.tiered.TieredEmbeddingStore` lookup on its local ids,
+and the results merge back into request order — the simulated equivalent
+of the all-to-all that follows per-worker embedding lookups in
+distributed DLRM serving.
+
+Model outputs (Algorithm 1 triples, global-id keyed) route the same way,
+through one **per-shard inline** :class:`~repro.runtime.prefetch_engine.
+PrefetchEngine` each: the engine dedups in-flight prefetch ids, cancels
+ids that became resident before issue, models each worker's private
+background fetch channel (timeliness), and applies synchronously — so
+the sharded store remains byte-for-byte equivalent to the composition of
+its per-shard single stores (the contract the property suite checks).
+
+Telemetry goes beyond the merged :class:`~repro.core.tiered.TierStats`:
+
+* **load / skew** — per-shard routed-id counts, aggregate and worst
+  single-batch imbalance (``max shard load / mean shard load``);
+* **stall** — per-shard modeled slow-tier time, plus the *critical-path*
+  view: per batch, workers fetch in parallel, so the batch pays the max
+  over shards, not the sum.  ``parallel_fetch_speedup`` is the ratio.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiered import TierStats, TieredEmbeddingStore
+from repro.sharding.embedding_shard import (ShardPlan, make_plan,
+                                            trace_frequencies)
+
+
+class ShardedTieredStore:
+    """N per-shard batched stores behind one single-store-compatible API.
+
+    Parameters
+    ----------
+    host:  (n_vectors, D) global host-tier table in global-id order.
+    plan:  a :class:`ShardPlan` (see :func:`ShardedTieredStore.build` for
+           the convenience constructor that makes one).
+    with_engines: route ``apply_model_outputs`` through per-shard inline
+           prefetch engines (dedup/cancel/timeliness telemetry).  The
+           apply semantics are identical either way.
+    """
+
+    def __init__(self, host: np.ndarray, plan: ShardPlan,
+                 policy: str = "lru", quantize: bool = False,
+                 fetch_us_fixed: float = 30.0, with_engines: bool = True,
+                 **store_kw):
+        if host.shape[0] != plan.n_vectors:
+            raise ValueError(f"host has {host.shape[0]} rows, "
+                             f"plan covers {plan.n_vectors}")
+        self.plan = plan
+        self.n_shards = plan.n_shards
+        self.emb_dim = host.shape[1]
+        # Per-shard stores model the per-row slow-tier cost; the fixed
+        # per-batch overhead is charged at the facade (once per batch with
+        # a miss for the sum view, once per missing *shard* for the
+        # critical-path view) so policy comparisons aren't aggregation
+        # artifacts — same scheme as the multi-table facade.
+        self.fetch_us_fixed = float(fetch_us_fixed)
+        self.stores: List[TieredEmbeddingStore] = [
+            TieredEmbeddingStore(host[g], int(c), policy=policy,
+                                 quantize=quantize, fetch_us_fixed=0.0,
+                                 **store_kw)
+            for g, c in zip(plan.global_ids, plan.capacities)
+        ]
+        self.out_dtype = (np.float32 if quantize
+                          else self.stores[0].buffer.dtype)
+        self.batches = 0
+        self._fixed_fetch_s = 0.0
+        # ---- load / critical-path telemetry ----
+        self._shard_lookups = np.zeros(self.n_shards, np.int64)
+        self._max_batch_imbalance = 0.0
+        self._critical_fetch_s = 0.0   # sum over batches of max-over-shards
+        self._engines = None
+        if with_engines:
+            from repro.runtime.clock import VirtualClock
+            from repro.runtime.prefetch_engine import PrefetchEngine
+            from repro.runtime.telemetry import RuntimeTelemetry
+
+            self.clock = VirtualClock()
+            self.engine_telemetry = [RuntimeTelemetry()
+                                     for _ in range(self.n_shards)]
+            self._engines = [
+                PrefetchEngine(st, telemetry=tel, clock=self.clock,
+                               scheduler="inline",
+                               fetch_us_per_row=st.fetch_us_per_row,
+                               fetch_us_fixed=self.fetch_us_fixed)
+                for st, tel in zip(self.stores, self.engine_telemetry)
+            ]
+
+    @classmethod
+    def build(cls, host: np.ndarray, rows_per_table: Sequence[int],
+              n_shards: int, placement: str = "table",
+              capacity: Optional[int] = None,
+              frequencies: Optional[np.ndarray] = None,
+              fast_weights: Optional[Sequence[float]] = None,
+              profile_ids: Optional[np.ndarray] = None,
+              **kw) -> "ShardedTieredStore":
+        """Plan + store in one call.  ``profile_ids`` (a trace sample)
+        stands in for explicit ``frequencies`` under ``"freq"``."""
+        if capacity is None:
+            raise ValueError("capacity (total fast-tier rows) is required")
+        if frequencies is None and profile_ids is not None:
+            frequencies = trace_frequencies(profile_ids, host.shape[0])
+        plan = make_plan(rows_per_table, n_shards, int(capacity),
+                         placement, frequencies=frequencies,
+                         fast_weights=fast_weights)
+        return cls(host, plan, **kw)
+
+    # ---------------- routing + merge (the all-to-all) ----------------
+
+    def lookup(self, global_ids: np.ndarray) -> jnp.ndarray:
+        """(M,) global ids -> (M, D): scatter ids shard-locally, one
+        batched per-shard lookup each, gather back in request order."""
+        gid, shard, local = self.plan.route(global_ids)
+        self.batches += 1
+        loads = np.bincount(shard, minlength=self.n_shards)
+        self._shard_lookups += loads
+        self._max_batch_imbalance = max(
+            self._max_batch_imbalance,
+            float(loads.max() / max(loads.mean(), 1e-12)))
+        out = np.empty((len(gid), self.emb_dim), self.out_dtype)
+        missed_any = False
+        critical_us = 0.0
+        for s in np.flatnonzero(loads).tolist():
+            m = shard == s
+            st = self.stores[s]
+            f0, od0 = st.stats.modeled_fetch_s, st.stats.on_demand_rows
+            # Timeliness probe only when this shard's channel has fetches
+            # in flight — skips the per-batch unique() on cold paths.
+            if self._engines is not None and self._engines[s]._pf_eta:
+                self._engines[s].observe_demand(np.unique(local[m]),
+                                                self.clock.now())
+            out[m] = np.asarray(st.lookup(local[m]))
+            d_us = (st.stats.modeled_fetch_s - f0) * 1e6
+            if st.stats.on_demand_rows > od0:
+                missed_any = True
+                d_us += self.fetch_us_fixed
+            critical_us = max(critical_us, d_us)
+        if missed_any:
+            self._fixed_fetch_s += self.fetch_us_fixed * 1e-6
+        self._critical_fetch_s += critical_us * 1e-6
+        if self._engines is not None:
+            # Workers fetch in parallel; modeled time moves by the batch's
+            # critical path (what timeliness is measured against).
+            self.clock.advance(critical_us)
+        return jnp.asarray(out)
+
+    def resident_mask(self, global_ids: np.ndarray) -> np.ndarray:
+        gid, shard, local = self.plan.route(global_ids)
+        mask = np.zeros(len(gid), bool)
+        for s in np.unique(shard).tolist():
+            m = shard == s
+            mask[m] = self.stores[s].resident_mask(local[m])
+        return mask
+
+    def _route_outputs(self, trunk, bits, prefetch_ids, staged: bool):
+        trunk, t_shard, t_loc = self.plan.route(trunk)
+        bits = np.asarray(bits).ravel()[: len(trunk)]  # zip truncation
+        t_shard, t_loc = t_shard[: len(bits)], t_loc[: len(bits)]
+        _, p_shard, p_loc = self.plan.route(prefetch_ids)
+        for s in np.unique(np.concatenate((t_shard, p_shard))).tolist():
+            tm, pm = t_shard == s, p_shard == s
+            if staged:
+                self.stores[s].stage_model_outputs(t_loc[tm], bits[tm],
+                                                   p_loc[pm])
+            elif self._engines is not None:
+                # Inline engine: dedup/cancel/channel accounting, then a
+                # synchronous apply — store state matches a direct call.
+                self._engines[s].submit(t_loc[tm], bits[tm], p_loc[pm],
+                                        now_us=self.clock.now())
+                self._engines[s].drain()
+            else:
+                self.stores[s].apply_model_outputs(t_loc[tm], bits[tm],
+                                                   p_loc[pm])
+
+    def apply_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
+                            prefetch_ids: np.ndarray):
+        """Route Algorithm 1 outputs (global-id keyed) to each worker's
+        engine (or store, with engines disabled)."""
+        self._route_outputs(trunk, bits, prefetch_ids, staged=False)
+
+    def stage_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
+                            prefetch_ids: np.ndarray):
+        """Double-buffered apply: route now, land at each shard store's
+        next lookup boundary."""
+        self._route_outputs(trunk, bits, prefetch_ids, staged=True)
+
+    def flush_staged(self):
+        for st in self.stores:
+            st.flush_staged()
+
+    # ---------------- aggregated accounting ----------------
+
+    @property
+    def capacity(self) -> int:
+        return int(sum(st.capacity for st in self.stores))
+
+    @property
+    def stats(self) -> TierStats:
+        agg = TierStats()
+        for st in self.stores:
+            agg.merge(st.stats)
+        agg.batches = self.batches  # facade batches, not per-shard sum
+        agg.modeled_fetch_s += self._fixed_fetch_s
+        return agg
+
+    def modeled_batch_ms(self) -> float:
+        """Sum view (comparable to the single store / facade)."""
+        return 1e3 * self.stats.modeled_fetch_s / max(self.batches, 1)
+
+    def critical_batch_ms(self) -> float:
+        """Parallel view: per batch, the slowest shard's fetch."""
+        return 1e3 * self._critical_fetch_s / max(self.batches, 1)
+
+    def load_imbalance(self) -> float:
+        """Aggregate max-shard load / mean-shard load (1.0 = perfect)."""
+        total = self._shard_lookups
+        return float(total.max() / max(total.mean(), 1e-12))
+
+    def shard_telemetry(self) -> dict:
+        """Per-shard load / skew / stall plus engine counters."""
+        fetch_s = self.stats.modeled_fetch_s
+        d = {
+            "n_shards": self.n_shards,
+            "placement": self.plan.placement,
+            "per_shard_rows": self.plan.shard_rows.tolist(),
+            "per_shard_capacity": [int(st.capacity) for st in self.stores],
+            "per_shard_lookups": self._shard_lookups.tolist(),
+            "per_shard_hit_rate": [round(st.stats.hit_rate, 4)
+                                   for st in self.stores],
+            "per_shard_evictions": [st.stats.evictions
+                                    for st in self.stores],
+            "per_shard_fetch_ms": [round(st.stats.modeled_fetch_s * 1e3, 3)
+                                   for st in self.stores],
+            "load_imbalance": round(self.load_imbalance(), 4),
+            "max_batch_imbalance": round(self._max_batch_imbalance, 4),
+            "modeled_fetch_ms_sum": round(fetch_s * 1e3, 3),
+            "modeled_fetch_ms_critical": round(
+                self._critical_fetch_s * 1e3, 3),
+            "parallel_fetch_speedup": round(
+                fetch_s / max(self._critical_fetch_s, 1e-12), 3),
+        }
+        if self._engines is not None:
+            for k in ("pf_submitted", "pf_deduped", "pf_cancelled_resident",
+                      "pf_issued", "pf_timely", "pf_late"):
+                d[f"per_shard_{k}"] = [getattr(t, k)
+                                       for t in self.engine_telemetry]
+        return d
+
+    def per_shard_hit_rates(self) -> List[float]:
+        return [st.stats.hit_rate for st in self.stores]

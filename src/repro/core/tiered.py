@@ -78,8 +78,12 @@ class TierStats:
         return self.hits / max(self.lookups, 1)
 
     def as_dict(self):
+        # ``hits`` is emitted raw alongside the rounded ``hit_rate``:
+        # serve/bench JSON must stay lossless for cross-run aggregation
+        # (summing rounded rates across runs is meaningless).
         return {
             "batches": self.batches, "lookups": self.lookups,
+            "hits": self.hits,
             "hit_rate": round(self.hit_rate, 4),
             "prefetch_hits": self.prefetch_hits,
             "on_demand_rows": self.on_demand_rows,

@@ -32,6 +32,7 @@ from repro.models.dlrm import init_dlrm
 def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
                 outputs: Optional[RecMGOutputs], batch_queries: int = 64,
                 fetch_us_per_row: float = 10.0, multi_table: bool = False,
+                shards: int = 0, placement: str = "table",
                 async_prefetch: bool = False, pipeline_depth: int = 2,
                 scheduler: str = "inline", interarrival_us: float = 0.0,
                 compute_us: Optional[float] = None, log=None) -> Dict:
@@ -40,6 +41,15 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     ``multi_table=True`` serves through the per-table facade (one batched
     store per sparse feature under the shared row budget) instead of one
     monolithic store.
+
+    ``shards > 0`` serves through the sharded multi-worker store
+    (:class:`~repro.core.sharded_serving.ShardedTieredStore`): the tables
+    are partitioned across ``shards`` simulated workers under the chosen
+    ``placement`` policy (``table`` / ``row`` / ``hash`` / ``freq``; the
+    frequency-aware planner profiles the first quarter of the trace) and
+    each batch is routed shard-locally and gathered back.  The result
+    dict gains a ``"shard"`` key with per-shard load/skew/stall
+    telemetry.
 
     ``async_prefetch=True`` serves through the pipelined runtime
     (:mod:`repro.runtime`): requests go through the admission queue +
@@ -55,7 +65,17 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     host = np.random.default_rng(0).normal(
         size=(host_rows, cfg.emb_dim)).astype(np.float32)
     pol = "recmg" if policy == "recmg" else "lru"
-    if multi_table:
+    if shards and multi_table:
+        raise ValueError("pass at most one of shards / multi_table")
+    if shards:
+        from repro.core.sharded_serving import ShardedTieredStore
+
+        profile = trace.global_id if placement == "freq" else None
+        store = ShardedTieredStore.build(
+            host, trace.rows_per_table, shards, placement,
+            capacity=capacity, policy=pol, profile_ids=profile,
+            fetch_us_per_row=fetch_us_per_row)
+    elif multi_table:
         store = MultiTableTieredStore.from_global_table(
             host, trace.rows_per_table, capacity=capacity, policy=pol,
             fetch_us_per_row=fetch_us_per_row)
@@ -186,6 +206,9 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     if multi_table:
         st["per_table_hit_rates"] = [
             round(h, 4) for h in store.per_table_hit_rates()]
+    if shards:
+        st["shard"] = store.shard_telemetry()
+        st["shard_load_imbalance"] = st["shard"]["load_imbalance"]
     return st
 
 
@@ -216,6 +239,14 @@ def main(argv=None):
     ap.add_argument("--multi-table", action="store_true",
                     help="serve through the per-table facade "
                          "(one batched store per sparse feature)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="partition the tables across this many simulated "
+                         "workers (0 = single-worker store)")
+    ap.add_argument("--placement", default="table",
+                    choices=["table", "row", "hash", "freq"],
+                    help="shard placement policy: table-wise bin-pack, "
+                         "row-wise round-robin, keyed hash, or the "
+                         "frequency-aware (RecShard-style) planner")
     ap.add_argument("--async-prefetch", action="store_true",
                     help="serve through the pipelined runtime: admission "
                          "queue + micro-batcher, background prefetch "
@@ -268,6 +299,7 @@ def main(argv=None):
     res = serve_trace(cfg, params, trace, capacity, args.policy, outputs,
                       batch_queries=args.batch_queries,
                       multi_table=args.multi_table,
+                      shards=args.shards, placement=args.placement,
                       async_prefetch=args.async_prefetch,
                       pipeline_depth=args.pipeline_depth,
                       scheduler=args.scheduler, log=print)

@@ -74,8 +74,10 @@ except ModuleNotFoundError:
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 # Deterministic per-test seed; cap examples (the fallback
-                # has no shrinker, so failures replay exactly).
-                n = min(getattr(wrapper, "_max_examples", 20), 25)
+                # has no shrinker, so failures replay exactly).  The cap
+                # is high enough for the slow-lane property suite's
+                # >=100-case budget (tests/test_property_equivalence.py).
+                n = min(getattr(wrapper, "_max_examples", 20), 200)
                 rng = np.random.default_rng(
                     zlib.crc32(fn.__name__.encode()))
                 for _ in range(n):

@@ -9,6 +9,18 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current run instead of "
+             "comparing against it (tests/test_golden_trace.py)")
+
+
+@pytest.fixture(scope="session")
+def update_golden(request):
+    return request.config.getoption("--update-golden")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,143 @@
+"""Golden-trace regression: serve a small fixed trace, compare the
+deterministic ``serve_trace`` metrics against checked-in JSON.
+
+The golden files (``tests/golden/*.json``) pin every counter- and
+model-derived metric — hit/miss/prefetch/eviction counters, the raw
+``hits`` (lossless alongside the rounded ``hit_rate``), the modeled
+slow-tier figures, and the sharded run's per-shard load/skew rows.
+Wall-clock fields (``*_batch_ms`` percentiles, ``fetch_s``...) are
+excluded by construction.
+
+On drift the test fails with a per-key expected-vs-actual diff and dumps
+both sides to ``runs/golden_diff/<name>.json`` (uploaded as a CI
+artifact).  After an *intentional* semantics change, refresh with:
+
+    PYTHONPATH=src python -m pytest tests/test_golden_trace.py --update-golden
+"""
+import dataclasses
+import json
+from functools import lru_cache
+from pathlib import Path
+
+import pytest
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+DIFF_DIR = Path(__file__).resolve().parents[1] / "runs" / "golden_diff"
+
+# Deterministic serve_trace outputs: counters + cost-model figures only.
+SERVE_KEYS = ("policy", "batches", "lookups", "hits", "hit_rate",
+              "prefetch_hits", "on_demand_rows", "evictions",
+              "on_demand_stall_ms", "modeled_fetch_ms_per_batch")
+SHARD_KEYS = ("n_shards", "placement", "per_shard_rows",
+              "per_shard_capacity", "per_shard_lookups",
+              "per_shard_hit_rate", "per_shard_evictions",
+              "load_imbalance", "max_batch_imbalance",
+              "modeled_fetch_ms_sum", "modeled_fetch_ms_critical")
+
+
+@lru_cache(maxsize=1)
+def _fixture():
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.trace import TraceGenConfig, generate_trace
+    from repro.models.dlrm import init_dlrm
+
+    cfg = dataclasses.replace(get_config("dlrm-recmg").reduced(),
+                              n_tables=4, rows_per_table=1024, multi_hot=2,
+                              emb_dim=16)
+    params = init_dlrm(jax.random.PRNGKey(0), cfg)
+    trace = generate_trace(TraceGenConfig(
+        n_tables=cfg.n_tables, rows_per_table=cfg.rows_per_table,
+        n_accesses=8000, seed=0, drift_every=10**9))
+    return cfg, params, trace
+
+
+def _serve(shards=0, placement="table"):
+    from repro.launch.serve import serve_trace
+
+    cfg, params, trace = _fixture()
+    cap = int(0.15 * trace.unique_count())
+    res = serve_trace(cfg, params, trace, cap, "lru", None, batch_queries=8,
+                      shards=shards, placement=placement)
+    metrics = {k: res[k] for k in SERVE_KEYS}
+    if shards:
+        metrics["shard"] = {k: res["shard"][k] for k in SHARD_KEYS}
+    return metrics
+
+
+def _flat(d, prefix=""):
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            out.update(_flat(v, f"{prefix}{k}."))
+        else:
+            out[f"{prefix}{k}"] = v
+    return out
+
+
+def _check_golden(name, metrics, update):
+    path = GOLDEN_DIR / f"{name}.json"
+    blob = json.dumps(metrics, indent=2, sort_keys=True) + "\n"
+    if update:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(blob)
+        pytest.skip(f"golden {name} refreshed")
+    if not path.exists():
+        pytest.fail(f"missing tests/golden/{name}.json — generate it with "
+                    "--update-golden and commit it")
+    expected = json.loads(path.read_text())
+    if expected == metrics:
+        return
+    exp_f, act_f = _flat(expected), _flat(metrics)
+    lines = [f"  {k}: expected {exp_f.get(k, '<missing>')!r}, "
+             f"got {act_f.get(k, '<missing>')!r}"
+             for k in sorted(set(exp_f) | set(act_f))
+             if exp_f.get(k) != act_f.get(k)]
+    DIFF_DIR.mkdir(parents=True, exist_ok=True)
+    (DIFF_DIR / f"{name}.json").write_text(json.dumps(
+        {"expected": expected, "actual": metrics,
+         "diff": [ln.strip() for ln in lines]}, indent=2, sort_keys=True))
+    pytest.fail(
+        f"serve_trace metrics drifted from tests/golden/{name}.json "
+        f"({len(lines)} keys; full dump in runs/golden_diff/):\n"
+        + "\n".join(lines)
+        + "\n  (intentional change? refresh with --update-golden)")
+
+
+def test_golden_serve_metrics(update_golden):
+    metrics = _serve()
+    # Satellite regression: the raw ``hits`` counter must be serialized
+    # (hit_rate alone is 4-dp-rounded, i.e. lossy for aggregation) and the
+    # dict must round-trip through JSON unchanged.
+    assert "hits" in metrics and isinstance(metrics["hits"], int)
+    assert json.loads(json.dumps(metrics)) == metrics
+    assert metrics["hit_rate"] == round(
+        metrics["hits"] / metrics["lookups"], 4)
+    _check_golden("serve_lru", metrics, update_golden)
+
+
+def test_golden_sharded_serve_metrics(update_golden):
+    metrics = _serve(shards=2, placement="table")
+    assert json.loads(json.dumps(metrics)) == metrics
+    # The shard aggregate stays lossless too: per-shard ints sum to the
+    # facade counters.
+    assert sum(metrics["shard"]["per_shard_lookups"]) == metrics["lookups"]
+    _check_golden("serve_lru_sharded_table2", metrics, update_golden)
+
+
+def test_golden_diff_is_readable(tmp_path, monkeypatch, update_golden):
+    """A drifted counter must fail with the offending key spelled out and
+    leave a machine-readable dump for the CI artifact."""
+    if update_golden:
+        pytest.skip("refresh run")
+    import test_golden_trace as mod
+
+    metrics = json.loads((GOLDEN_DIR / "serve_lru.json").read_text())
+    metrics["hits"] += 1
+    monkeypatch.setattr(mod, "DIFF_DIR", tmp_path)
+    with pytest.raises(pytest.fail.Exception) as ei:
+        mod._check_golden("serve_lru", metrics, update=False)
+    assert "hits: expected" in str(ei.value)
+    dump = json.loads((tmp_path / "serve_lru.json").read_text())
+    assert dump["expected"]["hits"] + 1 == dump["actual"]["hits"]

@@ -1,0 +1,249 @@
+"""Property-based equivalence suite (hypothesis, shim fallback).
+
+Two oracles, fuzzed over random traces / capacities / policies /
+priority streams:
+
+1. **Batched engine == seed reference** — ``TieredEmbeddingStore`` must
+   reproduce :class:`~repro.core.tiered_reference.ReferenceTieredStore`'s
+   hit / miss / on-demand / prefetch / eviction counters after *every*
+   batch, and return the exact host rows, for any generated workload.
+2. **Sharded == composition of single stores** — for every placement
+   policy and shard count, ``ShardedTieredStore`` must equal N
+   independent single stores fed the same shard-local sub-batches
+   (aggregate *and* per-shard counters), return gathered vectors
+   identical to the monolithic store, and with ``n_shards=1`` collapse
+   to the monolithic counters byte-for-byte.
+
+The ``*_deep`` variants are the slow CI lane's >=100-generated-case
+budget (40 + 40 + 30); the small variants keep a fuzz presence in the
+fast PR lane.  With ``hypothesis`` installed the same tests shrink; the
+bundled shim replays deterministically.
+"""
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core.sharded_serving import ShardedTieredStore
+from repro.core.tiered import TieredEmbeddingStore
+from repro.core.tiered_reference import ReferenceTieredStore
+from repro.sharding.embedding_shard import PLACEMENTS, make_plan
+
+COUNTERS = ("batches", "lookups", "hits", "prefetch_hits", "on_demand_rows",
+            "evictions")
+EMPTY = np.empty(0, np.int64)
+
+
+def _workload(seed, n_rows, n_acc):
+    """Zipf-skewed ids + a deterministic model-output schedule."""
+    rng = np.random.default_rng(seed)
+    ranks = np.minimum(rng.zipf(1.2, size=n_acc), n_rows) - 1
+    ids = rng.permutation(n_rows)[ranks].astype(np.int64)
+    return ids, np.random.default_rng(seed + 1)
+
+
+def _outputs_for(b, rng, chunk, n_rows, bits_every, pf_every):
+    """(trunk, bits, prefetch) items to apply after batch ``b``."""
+    items = []
+    if bits_every and b % bits_every == 0:
+        trunk = chunk[:12]
+        items.append((trunk, (rng.random(len(trunk)) < 0.5).astype(np.int64),
+                      EMPTY))
+    if pf_every and b % pf_every == 0:
+        items.append((EMPTY, EMPTY,
+                      np.unique(rng.integers(0, n_rows, size=6))))
+    return items
+
+
+# ---------------------------------------------------------------------------
+# 1) batched engine vs. per-key seed reference
+# ---------------------------------------------------------------------------
+
+
+def _check_batched_vs_reference(seed, n_rows, cap, batch, policy_bit,
+                                bits_every, pf_every):
+    policy = ("lru", "recmg")[policy_bit]
+    n_acc = batch * 8
+    ids, _ = _workload(seed, n_rows, n_acc)
+    host = np.random.default_rng(seed + 2).normal(
+        size=(n_rows, 4)).astype(np.float32)
+    new = TieredEmbeddingStore(host, cap, policy=policy)
+    ref = ReferenceTieredStore(host, cap, policy=policy)
+    rng_new = np.random.default_rng(seed + 3)
+    rng_ref = np.random.default_rng(seed + 3)
+    for b in range(n_acc // batch):
+        chunk = ids[b * batch: (b + 1) * batch]
+        o_new = np.asarray(new.lookup(chunk))
+        o_ref = np.asarray(ref.lookup(chunk))
+        np.testing.assert_array_equal(o_new, host[chunk])
+        np.testing.assert_array_equal(o_ref, host[chunk])
+        for item in _outputs_for(b, rng_new, chunk, n_rows, bits_every,
+                                 pf_every):
+            new.apply_model_outputs(*item)
+        for item in _outputs_for(b, rng_ref, chunk, n_rows, bits_every,
+                                 pf_every):
+            ref.apply_model_outputs(*item)
+        state = [(c, getattr(new.stats, c), getattr(ref.stats, c))
+                 for c in COUNTERS]
+        assert all(a == r for _, a, r in state), (policy, cap, b, state)
+    new.check_invariants()
+    assert set(new.slot_of) == set(ref.slot_of)
+
+
+_BATCHED_ARGS = (st.integers(0, 2**31 - 1),   # seed
+                 st.integers(24, 160),        # n_rows
+                 st.integers(2, 48),          # cap
+                 st.integers(8, 56),          # batch
+                 st.integers(0, 1),           # policy bit
+                 st.integers(0, 3),           # bits_every (0 = never)
+                 st.integers(0, 3))           # pf_every
+
+
+@settings(max_examples=8, deadline=None)
+@given(*_BATCHED_ARGS)
+def test_batched_matches_reference(seed, n_rows, cap, batch, policy_bit,
+                                   bits_every, pf_every):
+    _check_batched_vs_reference(seed, n_rows, cap, batch, policy_bit,
+                                bits_every, pf_every)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(*_BATCHED_ARGS)
+def test_batched_matches_reference_deep(seed, n_rows, cap, batch,
+                                        policy_bit, bits_every, pf_every):
+    _check_batched_vs_reference(seed, n_rows, cap, batch, policy_bit,
+                                bits_every, pf_every)
+
+
+# ---------------------------------------------------------------------------
+# 2) sharded store vs. composition of single stores (+ monolithic vectors)
+# ---------------------------------------------------------------------------
+
+
+def _check_sharded(seed, n_shards_bit, placement_idx, cap, batch,
+                   policy_bit, pf_every):
+    n_shards = (1, 2, 4)[n_shards_bit]
+    placement = PLACEMENTS[placement_idx]
+    policy = ("lru", "recmg")[policy_bit]
+    rng = np.random.default_rng(seed)
+    rows_per_table = rng.integers(12, 60, size=int(rng.integers(2, 5)))
+    if placement == "table":  # whole tables: can't out-shard the tables
+        n_shards = min(n_shards, len(rows_per_table))
+    n = int(rows_per_table.sum())
+    cap = min(max(cap, n_shards), n)
+    n_acc = batch * 8
+    ids, _ = _workload(seed + 1, n, n_acc)
+    host = np.random.default_rng(seed + 2).normal(
+        size=(n, 4)).astype(np.float32)
+    freq = np.bincount(ids[: n_acc // 2], minlength=n)
+    plan = make_plan(rows_per_table, n_shards, cap, placement,
+                     frequencies=freq)
+    plan.check()
+
+    sharded = ShardedTieredStore(host, plan, policy=policy)
+    mono = TieredEmbeddingStore(host, cap, policy=policy)
+    oracles = [TieredEmbeddingStore(host[g], int(c), policy=policy,
+                                    fetch_us_fixed=0.0)
+               for g, c in zip(plan.global_ids, plan.capacities)]
+
+    rng_s = np.random.default_rng(seed + 3)
+    rng_o = np.random.default_rng(seed + 3)
+    rng_m = np.random.default_rng(seed + 3)
+    for b in range(n_acc // batch):
+        chunk = ids[b * batch: (b + 1) * batch]
+        out = np.asarray(sharded.lookup(chunk))
+        np.testing.assert_array_equal(out, host[chunk])
+        # Gathered vectors identical to the monolithic store, any N.
+        np.testing.assert_array_equal(out, np.asarray(mono.lookup(chunk)))
+        gid, shard, local = plan.route(chunk)
+        for s in np.unique(shard).tolist():
+            oracles[s].lookup(local[shard == s])
+        for trunk, bits, pf in _outputs_for(b, rng_s, chunk, n, 2,
+                                            pf_every):
+            sharded.apply_model_outputs(trunk, bits, pf)
+        for trunk, bits, pf in _outputs_for(b, rng_m, chunk, n, 2,
+                                            pf_every):
+            mono.apply_model_outputs(trunk, bits, pf)
+        for trunk, bits, pf in _outputs_for(b, rng_o, chunk, n, 2,
+                                            pf_every):
+            _, t_sh, t_loc = plan.route(trunk)
+            _, p_sh, p_loc = plan.route(pf)
+            for s in np.unique(np.concatenate((t_sh, p_sh))).tolist():
+                oracles[s].apply_model_outputs(
+                    t_loc[t_sh == s], bits[t_sh == s], p_loc[p_sh == s])
+    # Aggregate + per-shard counters equal the single-store composition.
+    for c in COUNTERS:
+        per = [(getattr(st_.stats, c), getattr(o.stats, c))
+               for st_, o in zip(sharded.stores, oracles)]
+        assert all(a == b_ for a, b_ in per), (placement, n_shards, c, per)
+        if c != "batches":  # facade counts one batch per lookup call
+            assert getattr(sharded.stats, c) == sum(o for _, o in per)
+    for st_, o in zip(sharded.stores, oracles):
+        assert st_.slot_of == o.slot_of
+        st_.check_invariants()
+    if n_shards == 1:
+        for c in COUNTERS:
+            assert getattr(sharded.stats, c) == getattr(mono.stats, c), c
+
+
+_SHARDED_ARGS = (st.integers(0, 2**31 - 1),   # seed
+                 st.integers(0, 2),           # n_shards in {1,2,4}
+                 st.integers(0, len(PLACEMENTS) - 1),
+                 st.integers(2, 48),          # cap
+                 st.integers(12, 56),         # batch
+                 st.integers(0, 1),           # policy bit
+                 st.integers(0, 2))           # pf_every
+
+
+@settings(max_examples=6, deadline=None)
+@given(*_SHARDED_ARGS)
+def test_sharded_matches_single_stores(seed, n_shards_bit, placement_idx,
+                                       cap, batch, policy_bit, pf_every):
+    _check_sharded(seed, n_shards_bit, placement_idx, cap, batch,
+                   policy_bit, pf_every)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(*_SHARDED_ARGS)
+def test_sharded_matches_single_stores_deep(seed, n_shards_bit,
+                                            placement_idx, cap, batch,
+                                            policy_bit, pf_every):
+    _check_sharded(seed, n_shards_bit, placement_idx, cap, batch,
+                   policy_bit, pf_every)
+
+
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(PLACEMENTS) - 1),
+       st.integers(2, 40), st.integers(0, 1))
+def test_one_shard_collapses_to_monolithic(seed, placement_idx, cap,
+                                           policy_bit):
+    """n_shards=1: every placement is the identity mapping, so counters
+    reproduce the monolithic single store byte-for-byte."""
+    _check_sharded(seed, 0, placement_idx, cap, 32, policy_bit, 2)
+
+
+# ---------------------------------------------------------------------------
+# plan invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2),
+       st.integers(0, len(PLACEMENTS) - 1), st.integers(1, 64))
+def test_plan_invariants(seed, n_shards_bit, placement_idx, cap):
+    """Any plan: maps are exact inverses, budgets within bounds, the full
+    budget is allocated whenever it fits."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(8, 50, size=int(rng.integers(2, 6)))
+    n_shards = (1, 2, 4)[n_shards_bit]
+    if PLACEMENTS[placement_idx] == "table":
+        n_shards = min(n_shards, len(rows))
+    n = int(rows.sum())
+    freq = rng.integers(0, 100, size=n)
+    plan = make_plan(rows, n_shards, cap, PLACEMENTS[placement_idx],
+                     frequencies=freq)
+    plan.check()
+    want = max(n_shards, min(cap, n))
+    assert int(plan.capacities.sum()) == min(want, n)

@@ -1,0 +1,219 @@
+"""Sharded multi-worker store: placement semantics, budget split, load /
+skew / critical-path telemetry, engine routing, and the async runtime
+riding on top.  (The exhaustive equivalence fuzzing lives in
+``tests/test_property_equivalence.py``.)"""
+import numpy as np
+import pytest
+
+from repro.core.sharded_serving import ShardedTieredStore
+from repro.sharding.embedding_shard import (PLACEMENTS, make_plan,
+                                            trace_frequencies)
+
+EMPTY = np.empty(0, np.int64)
+ROWS = [100, 50, 200, 70]
+N_VEC = sum(ROWS)
+
+
+def _host(n=N_VEC, d=8, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _ids(n_acc=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.minimum(rng.zipf(1.15, size=n_acc), N_VEC) - 1
+    return rng.permutation(N_VEC)[ranks].astype(np.int64)
+
+
+# ---------------- placement plans ----------------
+
+
+def test_table_placement_keeps_tables_whole():
+    plan = make_plan(ROWS, 2, 64, "table")
+    offs = np.concatenate(([0], np.cumsum(ROWS)))
+    table_shards = [np.unique(plan.shard_of[offs[t]: offs[t + 1]])
+                    for t in range(len(ROWS))]
+    assert all(len(s) == 1 for s in table_shards)  # no split tables
+    # LPT bin-pack on (200, 100, 70, 50): {200} vs {100, 70, 50}.
+    assert plan.shard_rows.tolist() in ([200, 220], [220, 200])
+
+
+def test_row_placement_is_round_robin():
+    plan = make_plan(ROWS, 4, 64, "row")
+    gid = np.arange(N_VEC)
+    assert np.array_equal(plan.shard_of, (gid % 4).astype(np.int32))
+    assert np.array_equal(plan.local_of, gid // 4)
+
+
+def test_hash_placement_balances_without_striping():
+    plan = make_plan(ROWS, 4, 64, "hash")
+    rows = plan.shard_rows
+    assert rows.max() / rows.mean() < 1.2  # near-balanced
+    gid = np.arange(N_VEC)
+    assert not np.array_equal(plan.shard_of, (gid % 4).astype(np.int32))
+
+
+def test_freq_placement_packs_hot_rows_onto_rich_shards():
+    rng = np.random.default_rng(1)
+    freq = rng.zipf(1.3, size=N_VEC).astype(np.int64)
+    plan = make_plan(ROWS, 2, 60, "freq", frequencies=freq,
+                     fast_weights=[3.0, 1.0])
+    # Fast-tier-rich shard 0 holds 3x the budget...
+    assert plan.capacities.tolist() == [45, 15]
+    # ...and every hot row (top sum(caps) by frequency) got a shard whose
+    # budget can hold it: shard s received exactly caps[s] hot rows.
+    hot = np.lexsort((np.arange(N_VEC), -freq))[:60]
+    counts = np.bincount(plan.shard_of[hot], minlength=2)
+    assert counts.tolist() == [45, 15]
+    # The hottest row of all lands on the rich shard (weighted RR order).
+    assert plan.shard_of[hot[0]] == 0
+    # Cold rows equalize total row counts.
+    assert abs(int(plan.shard_rows[0]) - int(plan.shard_rows[1])) <= 1
+
+
+def test_one_shard_is_identity():
+    for placement in PLACEMENTS:
+        plan = make_plan(ROWS, 1, 64, placement,
+                         frequencies=np.ones(N_VEC))
+        assert np.array_equal(plan.local_of, np.arange(N_VEC))
+        assert plan.capacities.tolist() == [64]
+
+
+def test_plan_errors():
+    with pytest.raises(ValueError, match="unknown placement"):
+        make_plan(ROWS, 2, 64, "zigzag")
+    with pytest.raises(ValueError, match="needs per-row frequencies"):
+        make_plan(ROWS, 2, 64, "freq")
+    with pytest.raises(ValueError, match="more shards"):
+        make_plan(ROWS, 8, 64, "table")
+    with pytest.raises(ValueError, match="frequencies cover"):
+        make_plan(ROWS, 2, 64, "freq", frequencies=np.ones(3))
+    with pytest.raises(ValueError, match="cannot span"):
+        make_plan([2], 4, 4, "row")
+
+
+def test_trace_frequencies_profile_prefix():
+    ids = np.array([0, 0, 1, 2, 9, 9, 9, 9], np.int64)
+    f = trace_frequencies(ids, 10, sample_frac=0.5)
+    assert f.tolist() == [2, 1, 1, 0, 0, 0, 0, 0, 0, 0]
+
+
+# ---------------- sharded store ----------------
+
+
+def test_store_plan_shape_mismatch_raises():
+    plan = make_plan(ROWS, 2, 64, "table")
+    with pytest.raises(ValueError, match="plan covers"):
+        ShardedTieredStore(_host(N_VEC - 1), plan)
+    with pytest.raises(ValueError, match="capacity .* required"):
+        ShardedTieredStore.build(_host(), ROWS, 2, "row")
+
+
+def test_load_and_critical_path_telemetry():
+    plan = make_plan(ROWS, 2, 40, "table")
+    st = ShardedTieredStore(_host(), plan)
+    ids = _ids(600)
+    for b in range(6):
+        st.lookup(ids[b * 100: (b + 1) * 100])
+    tel = st.shard_telemetry()
+    assert sum(tel["per_shard_lookups"]) == 600 == st.stats.lookups
+    assert tel["load_imbalance"] >= 1.0
+    assert tel["max_batch_imbalance"] >= tel["load_imbalance"] - 1e-9
+    # Workers fetch in parallel: the critical path can't exceed the sum,
+    # and with >1 shard fetching it must be strictly below.
+    assert 0 < tel["modeled_fetch_ms_critical"] < tel["modeled_fetch_ms_sum"]
+    assert tel["parallel_fetch_speedup"] > 1.0
+    assert st.critical_batch_ms() < st.modeled_batch_ms()
+
+
+def test_fixed_overhead_charged_once_per_batch():
+    """Facade accounting mirrors the multi-table facade: sub-stores model
+    per-row cost only; the fixed per-batch overhead lands once per facade
+    batch with a miss (sum view)."""
+    plan = make_plan(ROWS, 4, 40, "row")
+    st = ShardedTieredStore(_host(), plan, fetch_us_fixed=30.0,
+                            fetch_us_per_row=10.0)
+    st.lookup(np.arange(8))  # 8 misses across 4 shards, one batch
+    assert st.stats.modeled_fetch_s == pytest.approx((30 + 8 * 10) * 1e-6)
+    st.lookup(np.arange(8))  # all hits: no fixed charge
+    assert st.stats.modeled_fetch_s == pytest.approx((30 + 8 * 10) * 1e-6)
+
+
+def test_engine_routing_and_telemetry():
+    plan = make_plan(ROWS, 2, 64, "table")
+    st = ShardedTieredStore(_host(), plan, policy="recmg")
+    # Prefetch ids on both shards; trunk ranks on one.
+    st.apply_model_outputs(EMPTY, EMPTY, np.array([5, 6, 250, 251]))
+    assert st.resident_mask(np.array([5, 6, 250, 251])).all()
+    assert st.stats.prefetch_hits == 0  # not yet demanded
+    st.lookup(np.array([5, 250]))
+    assert st.stats.prefetch_hits == 2
+    tel = st.shard_telemetry()
+    assert sum(tel["per_shard_pf_issued"]) == 4
+    assert sum(tel["per_shard_pf_timely"] + tel["per_shard_pf_late"]) == 2
+
+
+def test_engines_off_matches_engines_on():
+    ids = _ids(1200, seed=4)
+    runs = []
+    for with_engines in (True, False):
+        plan = make_plan(ROWS, 2, 48, "hash")
+        st = ShardedTieredStore(_host(), plan, policy="recmg",
+                                with_engines=with_engines)
+        for b in range(12):
+            st.lookup(ids[b * 100: (b + 1) * 100])
+            st.apply_model_outputs(ids[b * 100: b * 100 + 8],
+                                   np.ones(8, np.int64),
+                                   np.unique(ids[b * 3: b * 3 + 4]))
+        runs.append(st.stats.as_dict())
+    for wall in ("fetch_s", "gather_s", "model_s"):
+        runs[0].pop(wall), runs[1].pop(wall)
+    assert runs[0] == runs[1]
+
+
+def test_staged_outputs_land_at_next_lookup():
+    plan = make_plan(ROWS, 2, 64, "table")
+    st = ShardedTieredStore(_host(), plan)
+    st.stage_model_outputs(EMPTY, EMPTY, np.array([3, 260]))
+    assert st.stats.on_demand_rows == 0  # nothing applied yet
+    st.lookup(np.array([3, 260]))
+    assert st.stats.prefetch_hits == 2
+    st.stage_model_outputs(EMPTY, EMPTY, np.array([7]))
+    st.flush_staged()
+    assert st.resident_mask(np.array([7])).all()
+
+
+def test_async_runtime_over_sharded_store_matches_sync():
+    """PipelinedRuntime(inline) over the sharded store keeps the
+    determinism contract: counters equal the synchronous sharded replay,
+    and the pipeline hides part of the fetch stall."""
+    from repro.runtime import PipelinedRuntime, RuntimeConfig
+
+    ids = _ids(2400, seed=6)
+    batch = 48
+
+    def staged(b):
+        return [(EMPTY, EMPTY,
+                 np.unique(ids[(b + 1) * batch: (b + 1) * batch + 6]))]
+
+    def build():
+        return ShardedTieredStore(
+            _host(), make_plan(ROWS, 4, 56, "row"), policy="lru")
+
+    sync = build()
+    for b in range(len(ids) // batch):
+        sync.lookup(ids[b * batch: (b + 1) * batch])
+        for item in staged(b):
+            sync.stage_model_outputs(*item)
+        sync.flush_staged()
+
+    anc = build()
+    rt = PipelinedRuntime(anc, RuntimeConfig(
+        max_batch=1, pipeline_depth=2, compute_us=500.0))
+    rt.run((ids[i * batch: (i + 1) * batch]
+            for i in range(len(ids) // batch)),
+           lambda b, emb: (0.0, staged(b)))
+    for c in ("batches", "lookups", "hits", "prefetch_hits",
+              "on_demand_rows", "evictions"):
+        assert getattr(anc.stats, c) == getattr(sync.stats, c), c
+    assert anc.stats.prefetch_hits > 0
+    assert rt.telemetry.stall_ms < rt.telemetry.demand_fetch_ms
