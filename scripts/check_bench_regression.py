@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Perf regression gate: compare ``runs/bench_results.json`` against the
+checked-in baseline (``scripts/bench_baseline.json``).
+
+Two metrics guard the serving hot path:
+
+* ``batched_lookup_rows_per_s`` (bench ``tentpole``) — absolute batched
+  lookup throughput; a floor metric (machine-dependent, so the baseline
+  is deliberately conservative and the tolerance generous).
+* ``recmg_lru_p50_ratio`` (bench ``fig16``) — measured p50 batch latency
+  of the recmg policy relative to LRU; a ceiling metric (machine-
+  independent: both sides run on the same box, so this is the true guard
+  against the ML policy's bookkeeping creeping back onto the hot path).
+
+A metric regresses when it moves more than ``tolerance`` (default 30%)
+past its baseline in the bad direction.  Exit 1 on any regression —
+wired into the CI bench-smoke lane after the bench_e2e smoke.
+
+    PYTHONPATH=src python scripts/check_bench_regression.py \
+        [--results runs/bench_results.json] \
+        [--baseline scripts/bench_baseline.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: Path) -> dict:
+    rows = json.loads(path.read_text())
+    return {(r["bench"], r["name"]): r["value"] for r in rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="runs/bench_results.json")
+    ap.add_argument("--baseline",
+                    default=str(Path(__file__).parent / "bench_baseline.json"))
+    args = ap.parse_args(argv)
+
+    results = load_rows(Path(args.results))
+    base = json.loads(Path(args.baseline).read_text())
+    tol = float(base.get("tolerance", 0.30))
+
+    failures = []
+
+    def check_floor(key, name):
+        want = base.get(name)
+        got = results.get(key)
+        if want is None or got is None:
+            print(f"SKIP {name}: baseline={want} measured={got}")
+            return
+        floor = want * (1.0 - tol)
+        status = "OK" if got >= floor else "REGRESSION"
+        print(f"{status} {name}: measured {got:.1f} vs floor {floor:.1f} "
+              f"(baseline {want}, tolerance {tol:.0%})")
+        if got < floor:
+            failures.append(name)
+
+    def check_ceiling(key, name):
+        want = base.get(name)
+        got = results.get(key)
+        if want is None or got is None:
+            print(f"SKIP {name}: baseline={want} measured={got}")
+            return
+        ceil = want * (1.0 + tol)
+        status = "OK" if got <= ceil else "REGRESSION"
+        print(f"{status} {name}: measured {got:.3f} vs ceiling {ceil:.3f} "
+              f"(baseline {want}, tolerance {tol:.0%})")
+        if got > ceil:
+            failures.append(name)
+
+    check_floor(("tentpole", "batched_lookup_rows_per_s"),
+                "batched_lookup_rows_per_s")
+    check_ceiling(("fig16", "recmg_lru_p50_ratio"), "recmg_lru_p50_ratio")
+
+    if failures:
+        print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,265 @@
+"""Heap-backed reference RecMG buffer manager (the seed implementation).
+
+This is the original lazy-min-heap ``RecMGBuffer``, kept verbatim (same
+pattern as :mod:`repro.core.tiered_reference`) for two jobs:
+
+1. **Equivalence oracle** — the property suite replays fuzzed chunk
+   sequences through this class, the array-backed engine in
+   :mod:`repro.core.buffer_manager`, and ``SlowRecMGBuffer``, asserting
+   victim-for-victim identical eviction order and identical hit masks.
+2. **Speedup baseline** — per-key heap ops are what made the ``recmg``
+   policy ~4.5x slower per serving batch than LRU before the engine.
+
+Do not optimise this file; its value is that it stays slow and obviously
+correct.  New behavior belongs in :mod:`repro.core.priority_engine` /
+:mod:`repro.core.buffer_manager`.
+
+Original module docstring follows.
+
+The RecMG buffer manager — Algorithms 1 & 2 of the paper, with the RRIP
+semantics the paper cites.
+
+Each buffer entry carries an integer priority (``eviction_speed = 4``):
+the caching model's keep-bit puts just-accessed vectors in the
+cache-friendly class (priority = eviction_speed) or the cache-averse class
+(priority = 0, evict-next) — Hawkeye-style insertion; prefetched vectors
+enter at eviction_speed.  ``populate`` (Algorithm 2) evicts the minimum-
+priority entry, aging everyone *on demand* — only as far as needed to bring
+that minimum to zero, which is the RRIP scan the paper says it builds on.
+(The pseudocode's literal decay-by-1-per-eviction with priorities in
+{ev, ev+1} degenerates to LRU under buffer-scale eviction pressure; see
+EXPERIMENTS.md §Faithfulness notes — both readings are implemented and
+tested.)
+
+Production buffers hold O(100K+) vectors, so eviction is O(log n): a global
+decay epoch (age-by-d == epoch += d; effective priority = stored_priority +
+stored_epoch - epoch preserves eviction order of the static key
+stored_priority + stored_epoch) over a lazy min-heap whose entries are
+validated by (score, seq) — ties broken by insertion age.
+``SlowRecMGBuffer`` is the literal O(capacity) transcription used to
+cross-check in tests.
+
+Batched drivers use the chunk-at-a-time surface — ``set_priorities``,
+``fetch_many``, ``populate_many``, and ``access_chunk`` (the replay inner
+loop of ``run_recmg``) — instead of per-key calls; ``set_priority`` is the
+public single-key form (``_set_priority`` remains as an alias).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+
+class RecMGBuffer:
+    def __init__(self, capacity: int, eviction_speed: int = 4):
+        self.capacity = max(1, int(capacity))
+        self.ev = int(eviction_speed)
+        self.epoch = 0
+        self.score: Dict[int, int] = {}  # key -> stored_priority + epoch
+        self._seq_of: Dict[int, int] = {}  # key -> seq of its live entry
+        self.heap: List = []  # (score, seq, key) lazy
+        self.seq = 0
+
+    def __len__(self):
+        return len(self.score)
+
+    def contains(self, key: int) -> bool:
+        return key in self.score
+
+    def set_priority(self, key: int, priority: int):
+        """Insert ``key`` or refresh its priority (public single-key API)."""
+        s = priority + self.epoch
+        self.score[key] = s
+        self.seq += 1
+        self._seq_of[key] = self.seq
+        heapq.heappush(self.heap, (s, self.seq, key))
+
+    # Backwards-compatible alias; callers should use ``set_priority``.
+    _set_priority = set_priority
+
+    # ---------------- bulk (chunk-at-a-time) API ----------------
+
+    def set_priorities(self, keys: Iterable[int], priority: int,
+                       only_new: bool = False):
+        """Batched :meth:`set_priority` over a chunk of keys.
+
+        ``only_new=True`` skips keys that already hold an entry (the
+        admission-time insert of the tiered store, which must not demote a
+        key the caching model just ranked)."""
+        score, seq_of, heap = self.score, self._seq_of, self.heap
+        s = int(priority) + self.epoch
+        seq = self.seq
+        for k in keys:
+            k = int(k)
+            if only_new and k in score:
+                continue
+            seq += 1
+            score[k] = s
+            seq_of[k] = seq
+            heapq.heappush(heap, (s, seq, k))
+        self.seq = seq
+
+    def fetch_many(self, keys: Iterable[int], priority: int):
+        """Batched :meth:`fetch`: insert a chunk, evicting as needed."""
+        for k in keys:
+            self.fetch(int(k), priority)
+
+    def populate_many(self, n: int) -> List[int]:
+        """Evict up to ``n`` victims in one call (Algorithm 2, batched)."""
+        out = []
+        for _ in range(n):
+            v = self.populate()
+            if v is None:
+                break
+            out.append(v)
+        return out
+
+    def access_chunk(self, keys: np.ndarray, priority: int) -> np.ndarray:
+        """Serve a chunk of demand accesses; returns a per-access hit mask.
+
+        A miss fetches the key at ``priority`` (the tiered runtime's
+        on-demand insert).  This is the replay inner loop hoisted out of
+        ``run_recmg`` so drivers go chunk-at-a-time instead of paying
+        per-access method dispatch."""
+        score = self.score
+        hits = np.empty(len(keys), dtype=bool)
+        at_cap = self.capacity <= len(score) + len(keys)  # may need room
+        for i, k in enumerate(keys.tolist()):
+            h = k in score
+            hits[i] = h
+            if not h:
+                if at_cap:
+                    self._make_room()
+                self.set_priority(k, priority)
+        return hits
+
+    def populate(self) -> Optional[int]:
+        """Algorithm 2 with RRIP aging semantics: evict the minimum-priority
+        entry; decay everyone only as far as needed to bring that minimum to
+        zero (the RRIP "age until a victim exists" scan, via the epoch).
+
+        The paper's pseudocode decays by exactly 1 per call; under buffer-
+        sized eviction pressure that makes the recency epoch swamp the 0..5
+        priority range and the policy degenerates to LRU (±0.4% in our
+        measurements).  Age-on-demand keeps the caching model's bit decisive
+        — which is the behavior of the RRIP family the paper says it builds
+        on, and the only reading that reproduces its Fig. 8 gains.  See
+        EXPERIMENTS.md §Faithfulness notes.
+        """
+        victim = None
+        while self.heap:
+            s, sq, k = self.heap[0]
+            # An entry is live iff both score AND seq match (a refresh with
+            # an equal score would otherwise leave the stale seq winning the
+            # tie-break).
+            if self.score.get(k) == s and self._seq_of.get(k) == sq:
+                heapq.heappop(self.heap)
+                del self.score[k]
+                del self._seq_of[k]
+                victim = k
+                if s > self.epoch:
+                    self.epoch = s  # age exactly until this victim hits 0
+                break
+            heapq.heappop(self.heap)
+        return victim
+
+    def _make_room(self):
+        while len(self.score) >= self.capacity:
+            self.populate()
+
+    def fetch(self, key: int, priority: int):
+        """Insert (or re-prioritize) a vector."""
+        if key not in self.score:
+            self._make_room()
+        self._set_priority(key, priority)
+
+    def load_embeddings(self, trunk: Iterable[int], caching_bits: Iterable[int],
+                        prefetch_keys: Iterable[int],
+                        scaled_bits: bool = True):
+        """Algorithm 1.  ``trunk`` = the most recently accessed chunk (already
+        fetched on demand); caching_bits = the caching model's output C.
+
+        ``scaled_bits=True`` gives the keep/evict classes RRIP-separated
+        priorities (keep -> eviction_speed, evict -> 0/evict-next — Hawkeye's
+        cache-friendly/averse insertion, which the paper builds on).  The
+        paper's literal ``C[i] + eviction_speed`` keeps both classes within
+        1 of each other and measures within noise of LRU; see EXPERIMENTS.md
+        §Faithfulness notes.
+
+        Accepts plain iterables or NumPy arrays (arrays are the bulk
+        chunk-at-a-time path used by the batched tiered store)."""
+        if isinstance(trunk, np.ndarray):
+            trunk = trunk.tolist()
+        if isinstance(caching_bits, np.ndarray):
+            caching_bits = caching_bits.tolist()
+        if isinstance(prefetch_keys, np.ndarray):
+            prefetch_keys = prefetch_keys.tolist()
+        for key, c in zip(trunk, caching_bits):
+            pr = int(c) * self.ev if scaled_bits else int(c) + self.ev
+            if key in self.score:
+                self.set_priority(key, pr)
+            else:
+                self.fetch(key, pr)
+        for key in prefetch_keys:
+            if key not in self.score:
+                self.fetch(key, self.ev)
+                # paper: priority[P[i]] = eviction_speed ("high" so the
+                # prefetch survives until its use)
+
+
+class SlowRecMGBuffer:
+    """Literal transcription of Algorithms 1 & 2 (O(capacity) eviction) —
+    used to validate RecMGBuffer in tests.
+
+    ``clamp`` is the paper's ``max(0, p-1)``; it only compresses ties among
+    long-decayed entries (the paper doesn't specify tie order).  The O(log n)
+    epoch formulation is order-identical to ``clamp=False``."""
+
+    def __init__(self, capacity: int, eviction_speed: int = 4,
+                 clamp: bool = True):
+        self.capacity = max(1, int(capacity))
+        self.ev = int(eviction_speed)
+        self.clamp = clamp
+        self.priority: Dict[int, int] = {}
+        self.order: Dict[int, int] = {}
+        self.seq = 0
+
+    def __len__(self):
+        return len(self.priority)
+
+    def contains(self, key):
+        return key in self.priority
+
+    def populate(self):
+        victim = min(
+            self.priority, key=lambda k: (self.priority[k], self.order[k])
+        )
+        # RRIP aging: decay everyone by the victim's priority (age until a
+        # zero-priority victim exists), then evict it.
+        dec = max(0, self.priority[victim])
+        lo = 0 if self.clamp else -(1 << 60)
+        if dec:
+            for k in self.priority:
+                self.priority[k] = max(lo, self.priority[k] - dec)
+        del self.priority[victim]
+        del self.order[victim]
+        return victim
+
+    def fetch(self, key, priority):
+        if key not in self.priority:
+            while len(self.priority) >= self.capacity:
+                self.populate()
+        self.priority[key] = priority
+        self.seq += 1
+        self.order[key] = self.seq
+
+    def load_embeddings(self, trunk, caching_bits, prefetch_keys,
+                        scaled_bits: bool = True):
+        for key, c in zip(trunk, caching_bits):
+            pr = int(c) * self.ev if scaled_bits else int(c) + self.ev
+            self.fetch(key, pr)
+        for key in prefetch_keys:
+            if key not in self.priority:
+                self.fetch(key, self.ev)

@@ -380,6 +380,31 @@ def make_cache(name: str, capacity: int, keys: Optional[np.ndarray] = None):
 # ---------------------------------------------------------------------------
 
 
+def attribute_prefetch_hits(seg: np.ndarray, hits: np.ndarray,
+                            prefetched: set) -> int:
+    """Vectorized first-touch prefetch attribution over one replayed chunk.
+
+    For every key of ``seg`` that sits in ``prefetched``, its *first*
+    occurrence decides (hit -> one attributed prefetch hit) and the key is
+    retired from the set — identical to the per-key loop the replay
+    drivers used, but as one ``searchsorted`` membership pass against the
+    sorted prefetched ids.  Returns the number of attributed hits and
+    mutates ``prefetched`` in place."""
+    if not prefetched:
+        return 0
+    pf = np.fromiter(prefetched, np.int64, len(prefetched))
+    pf.sort()
+    pos = np.searchsorted(pf, seg)
+    pos_c = np.minimum(pos, pf.size - 1)
+    present = np.flatnonzero(pf[pos_c] == seg)
+    if present.size == 0:
+        return 0
+    u, first = np.unique(seg[present], return_index=True)
+    n_hit = int(np.count_nonzero(hits[present[first]]))
+    prefetched.difference_update(u.tolist())
+    return n_hit
+
+
 @dataclass
 class SimResult:
     accesses: int = 0

@@ -23,7 +23,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.buffer_manager import RecMGBuffer
-from repro.core.cache_sim import FALRU, SimResult
+from repro.core.cache_sim import FALRU, SimResult, attribute_prefetch_hits
 from repro.core.caching_model import predict_bits
 from repro.core.features import make_windows
 from repro.core.prefetch_model import decode_to_ids, predict_sequences
@@ -72,7 +72,8 @@ def _replay_segment(access, seg: np.ndarray, res: SimResult,
                     prefetched: set):
     """Serve one chunk of demand accesses through a bulk-access callable
     (``seg -> hit mask``), attributing hits/misses and first-touch
-    prefetch hits."""
+    prefetch hits (vectorized ``searchsorted`` membership — the per-key
+    set-walk was the last Python loop in the replay drivers)."""
     if not len(seg):
         return
     hits = access(seg)
@@ -81,12 +82,9 @@ def _replay_segment(access, seg: np.ndarray, res: SimResult,
     res.hits += nh
     res.on_demand += len(seg) - nh
     if prefetched:  # only non-empty between a prefetch issue and first use
-        for k, h in zip(seg.tolist(), hits.tolist()):
-            if k in prefetched:
-                if h:
-                    res.prefetch_hits += 1
-                    res.prefetch_useful += 1
-                prefetched.discard(k)
+        n_pf = attribute_prefetch_hits(seg, hits, prefetched)
+        res.prefetch_hits += n_pf
+        res.prefetch_useful += n_pf
 
 
 def run_recmg(trace: Trace, capacity: int, outputs: RecMGOutputs,

@@ -143,7 +143,9 @@ class MultiTableTieredStore:
             m = table == t
             st = self.stores[t]
             od0 = st.stats.on_demand_rows
-            out[m] = np.asarray(st.lookup(local[m]))
+            # lookup_host: sub-results merge on the host anyway, so the
+            # store materializes in one transfer (no device-side slice).
+            out[m] = st.lookup_host(local[m])
             missed = missed or st.stats.on_demand_rows > od0
         if missed:
             self._fixed_fetch_s += self.fetch_us_fixed * 1e-6
@@ -176,6 +178,15 @@ class MultiTableTieredStore:
         """Apply all staged outputs now (the inter-batch gap)."""
         for s in self.stores:
             s.flush_staged()
+
+    def warmup(self, batch_hint: int):
+        """Eagerly compile every scatter/gather shape bucket a batch of up
+        to ``batch_hint`` global ids can hit (single-store API parity; the
+        jitted functions are module-level, so across the per-table stores
+        only the first pays each compile).  Alternatively pass
+        ``warmup_batch=`` at construction — it flows to every sub-store."""
+        for s in self.stores:
+            s.warmup(batch_hint)
 
     # ---------------- aggregated accounting ----------------
 

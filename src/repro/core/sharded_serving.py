@@ -143,7 +143,9 @@ class ShardedTieredStore:
             if self._engines is not None and self._engines[s]._pf_eta:
                 self._engines[s].observe_demand(np.unique(local[m]),
                                                 self.clock.now())
-            out[m] = np.asarray(st.lookup(local[m]))
+            # lookup_host: the all-to-all merge is host-side, so each
+            # worker materializes in one transfer (no device-side slice).
+            out[m] = st.lookup_host(local[m])
             d_us = (st.stats.modeled_fetch_s - f0) * 1e6
             if st.stats.on_demand_rows > od0:
                 missed_any = True
@@ -201,6 +203,15 @@ class ShardedTieredStore:
     def flush_staged(self):
         for st in self.stores:
             st.flush_staged()
+
+    def warmup(self, batch_hint: int):
+        """Eagerly compile every scatter/gather shape bucket a batch of up
+        to ``batch_hint`` routed ids can hit on each worker (single-store
+        API parity; module-level jits mean only the first shard pays each
+        compile).  Alternatively pass ``warmup_batch=`` at construction —
+        it flows to every per-shard store."""
+        for st in self.stores:
+            st.warmup(batch_hint)
 
     # ---------------- aggregated accounting ----------------
 

@@ -27,6 +27,28 @@ the host tier.  The per-key seed implementation is preserved verbatim in
 :mod:`repro.core.tiered_reference`; ``tests/test_tiered_equivalence.py``
 proves both produce identical counters on a recorded trace.
 
+Under ``policy="recmg"`` eviction is driven by the **array-backed priority
+engine** (:mod:`repro.core.priority_engine`): the whole miss batch admits
+through one ``admit_interleaved`` call that ranks every victim in a single
+vectorized pass and resolves own-batch evictions (a just-admitted key
+evicted by a later key of the same batch) without per-key Python.  The
+seed-faithful per-key loop survives as ``_admit_recmg_sequential`` — the
+equivalence oracle, also the safety net should the engine ever desync from
+residency (checked per batch in O(1)).
+
+The gather path is **device-resident end-to-end**: one jitted
+``buf[idx][inv]`` fused gather per batch (both index vectors padded to
+power-of-two shape buckets), overflow rows folded in through a jitted
+``where``-select over staged host rows instead of a device->host->device
+bounce, and no intermediate ``block_until_ready`` between the miss-path
+scatter and the gather — fetch and gather pipeline inside one device sync
+(``fetch_s`` therefore measures host-side admit + dispatch; execution time
+lands in ``gather_s``).  ``warmup(batch_hint)`` (or the ``warmup_batch``
+constructor argument) eagerly compiles every shape bucket a batch can hit,
+so XLA compiles land at construction instead of inside measured batches;
+the jitted functions are module-level, so all stores of one process share
+one compile cache.
+
 The buffer is co-managed by the RecMG models exactly as in Algorithms 1 & 2:
 the caching model's bits set priorities of the just-accessed chunk, the
 prefetch model's predictions are inserted ahead of use, both computed one
@@ -58,6 +80,49 @@ def _bucket(n: int) -> int:
     """Round up to a power of two (>= 16): the shape-bucketing that keeps
     the jitted scatter/gather from recompiling for every working-set size."""
     return max(16, 1 << (int(n) - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# Module-level jitted scatter/gather: one compile cache per process, shared
+# by every store instance (per-instance lambdas would recompile the same
+# shape buckets once per table/shard).  ``inv`` folds the unique->request
+# expansion into the same fused program, so the result never leaves the
+# device; the ``_OV`` variants where-select staged host rows for overflow
+# (working set larger than the buffer) without a host round-trip.
+# ---------------------------------------------------------------------------
+
+# ``iv`` packs both index vectors — row 0 the unique slots, row 1 the
+# unique->request inverse — into one operand, so each gather costs a
+# single host->device transfer.
+_JIT_GATHER = jax.jit(lambda buf, iv: buf[iv[0]][iv[1]])
+_JIT_GATHER_OV = jax.jit(
+    lambda buf, iv, ov, hr: jnp.where(ov[:, None], hr, buf[iv[0]])[iv[1]])
+_JIT_GATHER_Q = jax.jit(
+    lambda buf, sc, iv:
+    (buf[iv[0]].astype(jnp.float32) * sc[iv[0]][:, None])[iv[1]])
+_JIT_GATHER_Q_OV = jax.jit(
+    lambda buf, sc, iv, ov, hr:
+    jnp.where(ov[:, None], hr,
+              buf[iv[0]].astype(jnp.float32) * sc[iv[0]][:, None])[iv[1]])
+_JIT_SCATTER = jax.jit(lambda buf, idx, rows: buf.at[idx].set(rows),
+                       donate_argnums=(0,))
+_JIT_SCATTER_SC = jax.jit(lambda sc, idx, s: sc.at[idx].set(s),
+                          donate_argnums=(0,))
+
+_KERNEL_JITS: Dict[str, object] = {}
+
+
+def _kernel_gathers():
+    """Pallas row-gather variants, built lazily (TPU backend only)."""
+    if not _KERNEL_JITS:
+        from repro.kernels.embedding_gather import gather_rows
+
+        _KERNEL_JITS["g"] = jax.jit(
+            lambda buf, iv: gather_rows(buf, iv[0])[iv[1]])
+        _KERNEL_JITS["gov"] = jax.jit(
+            lambda buf, iv, ov, hr:
+            jnp.where(ov[:, None], hr, gather_rows(buf, iv[0]))[iv[1]])
+    return _KERNEL_JITS["g"], _KERNEL_JITS["gov"]
 
 
 @dataclass
@@ -110,7 +175,8 @@ class TieredEmbeddingStore:
     def __init__(self, host_table: np.ndarray, capacity: int,
                  policy: str = "lru", eviction_speed: int = 4,
                  fetch_us_per_row: float = 10.0, fetch_us_fixed: float = 30.0,
-                 quantize: bool = False, use_kernel: Optional[bool] = None):
+                 quantize: bool = False, use_kernel: Optional[bool] = None,
+                 warmup_batch: Optional[int] = None):
         """``quantize=True``: int8 rows + per-row scale in the fast tier —
         the mixed-precision-embedding trick the paper cites ([90]): ~4x the
         resident rows per HBM byte, so at a fixed byte budget the buffer
@@ -118,7 +184,11 @@ class TieredEmbeddingStore:
         benchmarks/bench_e2e.py).
 
         ``use_kernel``: route the device gather through the Pallas
-        row-gather kernel (default: auto, TPU backend only)."""
+        row-gather kernel (default: auto, TPU backend only).
+
+        ``warmup_batch``: eagerly compile the jitted scatter/gather for
+        every power-of-two shape bucket a batch of up to this many ids can
+        hit (see :meth:`warmup`); None skips the warmup."""
         self.host = host_table
         n, d = host_table.shape
         self.capacity = max(1, int(capacity))  # same clamp as RecMGBuffer
@@ -140,8 +210,10 @@ class TieredEmbeddingStore:
         self.policy = policy
         # The store owns RESIDENCY (_slot_map); the RecMG structure only
         # ranks priorities, so it gets unbounded capacity and never
-        # self-evicts — eviction drains its stale non-resident entries.
-        self.recmg = RecMGBuffer(1 << 40, eviction_speed)
+        # self-evicts — under recmg its live set mirrors the resident set
+        # exactly (checked in check_invariants), which is what lets
+        # ``_admit`` rank a whole victim batch in one engine pass.
+        self.recmg = RecMGBuffer(1 << 40, eviction_speed, n_keys_hint=n)
         self.fetch_us_per_row = fetch_us_per_row
         self.fetch_us_fixed = fetch_us_fixed
         self.stats = TierStats()
@@ -150,23 +222,16 @@ class TieredEmbeddingStore:
             use_kernel = jax.default_backend() == "tpu"
         self.use_kernel = bool(use_kernel) and not quantize
         if quantize:
-            self._gather = jax.jit(
-                lambda buf, sc, idx: buf[idx].astype(jnp.float32)
-                * sc[idx][:, None]
-            )
+            self._gather_inv, self._gather_ov = _JIT_GATHER_Q, _JIT_GATHER_Q_OV
+            self._out_np_dtype = np.dtype(np.float32)
         elif self.use_kernel:
-            from repro.kernels.embedding_gather import gather_rows
-
-            self._gather = jax.jit(lambda buf, idx: gather_rows(buf, idx))
+            self._gather_inv, self._gather_ov = _kernel_gathers()
+            self._out_np_dtype = np.dtype(self.buffer.dtype)
         else:
-            self._gather = jax.jit(lambda buf, idx: buf[idx])
-        self._scatter = jax.jit(
-            lambda buf, idx, rows: buf.at[idx].set(rows),
-            donate_argnums=(0,),
-        )
-        self._scatter_sc = jax.jit(
-            lambda sc, idx, s: sc.at[idx].set(s), donate_argnums=(0,)
-        )
+            self._gather_inv, self._gather_ov = _JIT_GATHER, _JIT_GATHER_OV
+            self._out_np_dtype = np.dtype(self.buffer.dtype)
+        if warmup_batch:
+            self.warmup(warmup_batch)
 
     # ---------------- compat / introspection ----------------
 
@@ -188,7 +253,8 @@ class TieredEmbeddingStore:
 
     def check_invariants(self):
         """Residency invariants (used by tests): the slot map and slot->key
-        array are exact inverses and the free stack covers the rest."""
+        array are exact inverses, the free stack covers the rest, and under
+        recmg the priority engine's live set mirrors residency exactly."""
         res = np.flatnonzero(self._slot_key >= 0)
         keys = self._slot_key[res]
         assert np.array_equal(self._slot_map[keys], res.astype(np.int32))
@@ -196,6 +262,52 @@ class TieredEmbeddingStore:
         assert np.count_nonzero(self._slot_map >= 0) == len(res)
         free = self._free[: self._n_free]
         assert np.all(self._slot_key[free] < 0)
+        if self.policy == "recmg":
+            # Every resident key holds a live ranking entry; the engine may
+            # additionally hold *stale* entries for non-resident keys
+            # (prefetch rankings that outlived their row — the seed's heap
+            # had the same, drained lazily during victim selection).
+            eng = self.recmg.engine
+            live = eng.live_keys()
+            assert eng.count == live.size
+            assert np.all(np.isin(keys, live))
+
+    def warmup(self, batch_hint: int):
+        """Eagerly compile the jitted scatter/gather for every power-of-two
+        shape bucket a batch of up to ``batch_hint`` ids can hit, so XLA
+        compiles land at construction instead of inside measured batches
+        (they showed up as ~600ms p99 spikes against a ~10ms p50).  The
+        jitted functions are module-level: across tables/shards only the
+        first store pays each compile."""
+        bi = _bucket(int(batch_hint))
+        d = self.host.shape[1]
+        b = 16
+        while b <= bi:
+            iv = jnp.zeros((2, b), jnp.int32)
+            ov = jnp.zeros(b, bool)
+            hr = jnp.zeros((b, d), self._out_np_dtype)
+            gather_args = (
+                (self.buffer, self.scales) if self.quantize
+                else (self.buffer,)
+            )
+            self._gather_inv(*gather_args, iv)
+            self._gather_ov(*gather_args, iv, ov, hr)
+            # Scatter warm-up must not clobber buffer contents: rewrite
+            # slot 0 with its own current row (a no-op write).
+            slots = jnp.zeros(b, jnp.int32)
+            if self.quantize:
+                q0 = np.repeat(np.asarray(self.buffer[0:1]), b, axis=0)
+                s0 = np.repeat(np.asarray(self.scales[0:1]), b)
+                self.buffer = _JIT_SCATTER(self.buffer, slots,
+                                           jnp.asarray(q0))
+                self.scales = _JIT_SCATTER_SC(self.scales, slots,
+                                              jnp.asarray(s0))
+            else:
+                r0 = np.repeat(np.asarray(self.buffer[0:1]), b, axis=0)
+                self.buffer = _JIT_SCATTER(self.buffer, slots,
+                                           jnp.asarray(r0))
+            b <<= 1
+        jax.block_until_ready(self.buffer)
 
     # ---------------- slot allocation / eviction ----------------
 
@@ -246,16 +358,22 @@ class TieredEmbeddingStore:
         m = len(missing)
         kept = np.ones(m, bool)
         if self.policy == "recmg":
-            # Heap-driven victim choice is inherently sequential when
-            # evictions interleave with admissions; batch the common
-            # no-eviction case and fall back per key otherwise.
             if m <= self._n_free:
                 slots = self._alloc(m)
                 self._bind(missing, slots)
                 self.recmg.set_priorities(missing, self.recmg.ev,
                                           only_new=True)
-            else:
+            elif self.recmg.engine.contains_many(missing).any():
+                # Resurrection: a missing key still holds a stale ranking
+                # entry (it was prefetch-ranked after being evicted in its
+                # own admission batch).  Re-admitting it must *keep* that
+                # old entry (the seed's only_new semantics), and the old
+                # entry can even be chosen as a victim mid-batch — exact
+                # only in the per-key oracle.  Rare: requires a stale key
+                # to be demand-missed while its entry survives.
                 self._admit_recmg_sequential(missing, kept)
+            else:
+                self._admit_recmg_batched(missing, kept)
             return kept
         # ---- LRU: fully batched ----
         if m >= self.capacity:
@@ -284,8 +402,42 @@ class TieredEmbeddingStore:
         self._bind(missing, self._alloc(m))
         return kept
 
+    def _admit_recmg_batched(self, missing: np.ndarray, kept: np.ndarray):
+        """Fully batched recmg admission under eviction pressure: the
+        engine ranks all victims in one vectorized pass
+        (:meth:`~repro.core.priority_engine.ArrayPriorityEngine.
+        admit_interleaved`), resolving own-batch evictions (a key of this
+        batch evicted by a later one) vectorially.  Counter- and
+        victim-identical to :meth:`_admit_recmg_sequential` (the property
+        suite fuzzes both against the seed reference)."""
+        m = len(missing)
+        slot_map = self._slot_map
+        victims, own, kept_eng = self.recmg.engine.admit_interleaved(
+            missing, self.recmg.ev, self._n_free,
+            resident_fn=lambda kk: slot_map[kk] >= 0)
+        ext = victims[~own]
+        if ext.size:
+            vs = self._slot_map[ext]
+            self._slot_map[ext] = -1
+            self._slot_key[vs] = -1
+            self._pf_flag[vs] = False
+            self._release(vs.astype(np.int32, copy=False))
+        # Own-batch victims were bound and then evicted by the sequential
+        # loop; both count as evictions and both consumed a clock tick.
+        self.stats.evictions += int(victims.size)
+        kidx = np.flatnonzero(kept_eng)
+        kk = missing[kidx]
+        slots = self._alloc(kidx.size)
+        self._slot_map[kk] = slots
+        self._slot_key[slots] = kk
+        self._admit_seq[slots] = self._clock + kidx
+        self._last_use[slots] = self._clock + kidx
+        self._clock += m
+        kept[:] = kept_eng
+
     def _admit_recmg_sequential(self, missing: np.ndarray, kept: np.ndarray):
-        """Seed-faithful per-key admission under recmg eviction pressure."""
+        """Seed-faithful per-key admission under recmg eviction pressure
+        (the equivalence oracle for :meth:`_admit_recmg_batched`)."""
         slot_map, slot_key = self._slot_map, self._slot_key
         pos = {int(k): i for i, k in enumerate(missing.tolist())}
         for i, k in enumerate(missing.tolist()):
@@ -315,7 +467,29 @@ class TieredEmbeddingStore:
         """ids: (M,) int64 -> (M, D) embeddings from the fast tier,
         fetching misses on demand.  One vectorized pass: hit/miss partition
         via the slot map, batched admission, single fused scatter + gather.
+        The result stays on the device (feed it straight into the jitted
+        forward); facades that merge sub-results host-side should use
+        :meth:`lookup_host` instead, which saves the device-side slice.
         """
+        out, m_ids, t0 = self._lookup_padded(ids)
+        out = out[:m_ids]
+        jax.block_until_ready(out)
+        self.stats.gather_s += time.perf_counter() - t0
+        return out
+
+    def lookup_host(self, ids: np.ndarray) -> np.ndarray:
+        """:meth:`lookup` materialized as a NumPy array in one transfer —
+        the multi-table and sharded facades reassemble per-store results
+        on the host, so slicing there is free.  Counters are identical to
+        :meth:`lookup`."""
+        out, m_ids, t0 = self._lookup_padded(ids)
+        out = np.asarray(out)[:m_ids]
+        self.stats.gather_s += time.perf_counter() - t0
+        return out
+
+    def _lookup_padded(self, ids: np.ndarray):
+        """Shared lookup pipeline; returns (padded device rows, true batch
+        size, gather timer start) — callers slice and sync."""
         self._drain_staged()
         ids = np.asarray(ids).ravel()
         self.stats.batches += 1
@@ -338,7 +512,9 @@ class TieredEmbeddingStore:
             kept = self._admit(missing)
             wkeys = missing[kept]
             self._write_rows(self._slot_map[wkeys], rows[kept])
-            jax.block_until_ready(self.buffer)
+            # No sync here: the scatter pipelines into the gather below and
+            # both resolve in that single device sync (fetch_s is the
+            # host-side admit + dispatch time; execution lands in gather_s).
             self.stats.fetch_s += time.perf_counter() - t0
             self.stats.on_demand_rows += int(missing.size)
             self.stats.modeled_fetch_s += (
@@ -355,27 +531,39 @@ class TieredEmbeddingStore:
             self._clock += uniq.size
 
         t0 = time.perf_counter()
-        # A batch whose unique working set exceeds the buffer can evict rows
-        # admitted earlier in the same batch; those overflow rows are served
-        # straight from the host tier (counted as on-demand already).
+        # Device-resident gather: one fused jitted pass does the slot
+        # gather, the overflow where-select, and the unique->request
+        # expansion, so the result never bounces through the host.  The
+        # two index vectors are packed into one (2, bucket) operand — a
+        # single transfer — and share ONE power-of-two bucket (u <= M
+        # always): independent buckets would give O(log^2) compiled shape
+        # combos, and per-table sub-batch sizes vary enough to hit them
+        # all at runtime.  Buckets are warmed eagerly by :meth:`warmup`.
         gather_args = (
             (self.buffer, self.scales) if self.quantize else (self.buffer,)
         )
-        # Pad the index vector to a power-of-two bucket: the gather shape
-        # collapses to O(log) variants, so XLA compiles once per bucket
-        # instead of once per distinct working-set size.
         u = uniq.size
-        idx = np.zeros(_bucket(u), np.int32)
-        np.maximum(slots_u, 0, out=idx[:u], casting="unsafe")
-        out = np.asarray(self._gather(*gather_args, jnp.asarray(idx)))[:u]
+        m_ids = ids.size
+        bsz = _bucket(m_ids)
+        iv = np.zeros((2, bsz), np.int32)
+        np.maximum(slots_u, 0, out=iv[0, :u], casting="unsafe")
+        iv[1, :m_ids] = inv
         overflow = slots_u < 0
         if overflow.any():
-            out = out.copy()
-            out[overflow] = self.host[uniq[overflow]]
-        out = jnp.asarray(out[inv])
-        jax.block_until_ready(out)
-        self.stats.gather_s += time.perf_counter() - t0
-        return out
+            # A batch whose unique working set exceeds the buffer can evict
+            # rows admitted earlier in the same batch; stage those rows
+            # from the host tier into the padded gather input and fold them
+            # in with a jitted where-select (counted as on-demand already).
+            ov = np.zeros(bsz, bool)
+            ov[:u] = overflow
+            hrows = np.zeros((bsz, self.host.shape[1]),
+                             self._out_np_dtype)
+            hrows[:u][overflow] = self.host[uniq[overflow]]
+            out = self._gather_ov(*gather_args, jnp.asarray(iv),
+                                  jnp.asarray(ov), jnp.asarray(hrows))
+        else:
+            out = self._gather_inv(*gather_args, jnp.asarray(iv))
+        return out, m_ids, t0
 
     def _write_rows(self, slots: np.ndarray, rows: np.ndarray):
         if not len(slots):
@@ -390,13 +578,13 @@ class TieredEmbeddingStore:
         if self.quantize:
             scale = np.abs(rows).max(axis=1) / 127.0 + 1e-12
             q = np.clip(np.round(rows / scale[:, None]), -127, 127)
-            self.buffer = self._scatter(
+            self.buffer = _JIT_SCATTER(
                 self.buffer, jnp.asarray(slots), jnp.asarray(q, jnp.int8))
-            self.scales = self._scatter_sc(
+            self.scales = _JIT_SCATTER_SC(
                 self.scales, jnp.asarray(slots),
                 jnp.asarray(scale, jnp.float32))
         else:
-            self.buffer = self._scatter(
+            self.buffer = _JIT_SCATTER(
                 self.buffer, jnp.asarray(slots), jnp.asarray(rows))
 
     # ---------------- RecMG co-management hooks ----------------

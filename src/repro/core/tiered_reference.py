@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buffer_manager import RecMGBuffer
+# The reference store pairs with the *reference* (heap) buffer manager so
+# the oracle chain stays fully independent of the array-backed engine.
+from repro.core.buffer_manager_reference import RecMGBuffer
 from repro.core.tiered import TierStats
 
 

@@ -67,6 +67,10 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     pol = "recmg" if policy == "recmg" else "lru"
     if shards and multi_table:
         raise ValueError("pass at most one of shards / multi_table")
+    # Warm the jitted scatter/gather shape buckets at construction (off the
+    # measured path): without this, the first batch that hits each
+    # power-of-two bucket pays an XLA compile inside the latency window —
+    # visible as ~600ms p99 spikes against a ~10ms p50.
     if shards:
         from repro.core.sharded_serving import ShardedTieredStore
 
@@ -74,14 +78,15 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         store = ShardedTieredStore.build(
             host, trace.rows_per_table, shards, placement,
             capacity=capacity, policy=pol, profile_ids=profile,
-            fetch_us_per_row=fetch_us_per_row)
+            fetch_us_per_row=fetch_us_per_row, warmup_batch=per_batch)
     elif multi_table:
         store = MultiTableTieredStore.from_global_table(
             host, trace.rows_per_table, capacity=capacity, policy=pol,
-            fetch_us_per_row=fetch_us_per_row)
+            fetch_us_per_row=fetch_us_per_row, warmup_batch=per_batch)
     else:
         store = TieredEmbeddingStore(
-            host, capacity, policy=pol, fetch_us_per_row=fetch_us_per_row)
+            host, capacity, policy=pol, fetch_us_per_row=fetch_us_per_row,
+            warmup_batch=per_batch)
     fwd = jax.jit(lambda pr, d, e: _dense_forward(pr, cfg, d, e))
 
     gid = trace.global_id
@@ -129,6 +134,14 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         c = time.perf_counter() - t1
         compute["s"] += c
         return c
+
+    # Warm the jitted dense forward off the measured path: its first-call
+    # XLA compile otherwise lands inside batch 0's latency window and
+    # dominates the p99 (~150ms against a ~5ms p50).  Shapes/dtypes match
+    # the real batches, so this is a pure compile-cache fill.
+    warm_pooled = jnp.zeros((batch_queries, T, cfg.emb_dim), jnp.float32)
+    warm_dense = jnp.zeros((batch_queries, cfg.dense_features), jnp.float32)
+    jax.block_until_ready(fwd(params, warm_dense, warm_pooled))
 
     rt = None
     if async_prefetch:

@@ -124,18 +124,20 @@ class PrefetchEngine:
             # In-flight dedup (first occurrence wins, within and across
             # queued items): the store would filter the duplicate against
             # residency at apply time anyway, so dropping it here is
-            # behavior-preserving and saves queue/channel traffic.  The
-            # lock keeps the membership test coherent with the worker's
-            # _retire in thread mode.
-            keep = []
+            # behavior-preserving and saves queue/channel traffic.
+            # Within-chunk duplicates collapse vectorially first, so the
+            # locked set probe (coherent with the worker's _retire in
+            # thread mode) only walks the unique ids.
+            u, first = np.unique(pf, return_index=True)
+            cand = pf[np.sort(first)] if u.size < pf.size else pf
             seen = self._inflight
             with self.lock:
-                for k in pf.tolist():
-                    if k not in seen:
-                        seen.add(k)
-                        keep.append(k)
-            tel.pf_deduped += int(pf.size) - len(keep)
-            pf = np.asarray(keep, np.int64)
+                fresh = np.fromiter((k not in seen for k in cand.tolist()),
+                                    bool, cand.size)
+                keep = cand[fresh]
+                seen.update(keep.tolist())
+            tel.pf_deduped += int(pf.size) - int(keep.size)
+            pf = keep
             self._schedule_channel(pf, now)
         item = WorkItem(trunk, bits, pf, submit_us=now)
         if self._q is not None:
@@ -264,8 +266,7 @@ class PrefetchEngine:
     def _retire(self, pf: np.ndarray):
         # Callers hold self.lock (worker loop / inline drain), pairing
         # with the locked dedup in submit().
-        for k in pf.tolist():
-            self._inflight.discard(k)
+        self._inflight.difference_update(np.asarray(pf).tolist())
 
     # ---------------- demand-side hooks ----------------
 

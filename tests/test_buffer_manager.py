@@ -1,8 +1,11 @@
-"""RecMG buffer (Algorithms 1 & 2): the O(log n) epoch-trick implementation
-must make the same victim choices as the literal O(capacity) transcription."""
+"""RecMG buffer (Algorithms 1 & 2): the array-backed engine implementation
+must make the same victim choices as the literal O(capacity) transcription
+(and as the heap reference — see tests/test_property_equivalence.py)."""
+import numpy as np
 from _hypothesis_shim import given, settings, st
 
 from repro.core.buffer_manager import RecMGBuffer, SlowRecMGBuffer
+from repro.core.priority_engine import ArrayPriorityEngine
 
 
 @settings(max_examples=40, deadline=None)
@@ -57,3 +60,17 @@ def test_age_on_demand_eviction():
     assert buf.populate() == 1  # ages until the sole entry reaches 0
     assert len(buf) == 0
     assert buf.populate() is None
+
+
+def test_engine_array_priorities_align_with_only_new_filter():
+    """Regression: per-key priority arrays must follow their keys through
+    the only_new filter (a skipped live key must not shift the priorities
+    of the surviving ones)."""
+    eng = ArrayPriorityEngine()
+    eng.set_many(np.array([5]), 0)
+    eng.set_many(np.array([5, 6, 6, 7]), np.array([10, 20, 30, 40]),
+                 only_new=True)
+    assert eng._score[5] == 0      # live: untouched
+    assert eng._score[6] == 20     # first occurrence wins, not 10/30
+    assert eng._score[7] == 40
+    assert eng.count == 3

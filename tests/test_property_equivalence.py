@@ -23,6 +23,8 @@ import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, st
 
+from repro.core.buffer_manager import RecMGBuffer, SlowRecMGBuffer
+from repro.core.buffer_manager_reference import RecMGBuffer as HeapRecMGBuffer
 from repro.core.sharded_serving import ShardedTieredStore
 from repro.core.tiered import TieredEmbeddingStore
 from repro.core.tiered_reference import ReferenceTieredStore
@@ -222,6 +224,101 @@ def test_one_shard_collapses_to_monolithic(seed, placement_idx, cap,
     """n_shards=1: every placement is the identity mapping, so counters
     reproduce the monolithic single store byte-for-byte."""
     _check_sharded(seed, 0, placement_idx, cap, 32, policy_bit, 2)
+
+
+# ---------------------------------------------------------------------------
+# 3) array-backed priority engine vs heap reference vs literal transcription
+# ---------------------------------------------------------------------------
+
+
+def _check_engine_vs_heap(seed, cap, ev, n_steps):
+    """Fuzzed chunk sequences over the full bulk surface: the array engine
+    must match the heap reference victim-for-victim (``populate_many``),
+    hit-mask-for-hit-mask (``access_chunk``), and state-for-state (the
+    ``score`` dict, ``seq``, and ``epoch``) after every operation."""
+    rng = np.random.default_rng(seed)
+    fast = RecMGBuffer(cap, ev)
+    heap = HeapRecMGBuffer(cap, ev)
+    for step in range(n_steps):
+        op = int(rng.integers(0, 5))
+        if op == 0:
+            n = int(rng.integers(0, 8))
+            trunk = rng.integers(0, 30, n)
+            bits = rng.integers(0, 2, n)
+            pf = rng.integers(0, 30, rng.integers(0, 4))
+            sb = bool(rng.integers(0, 2))
+            fast.load_embeddings(trunk, bits, pf, scaled_bits=sb)
+            heap.load_embeddings(trunk, bits, pf, scaled_bits=sb)
+        elif op == 1:
+            keys = rng.integers(0, 30, rng.integers(1, 25))
+            pr = int(rng.integers(0, 5))
+            assert (fast.access_chunk(keys, pr).tolist()
+                    == heap.access_chunk(keys, pr).tolist()), (seed, step)
+        elif op == 2:
+            n = int(rng.integers(0, 5))
+            assert fast.populate_many(n) == heap.populate_many(n), (seed,
+                                                                   step)
+        elif op == 3:
+            keys = rng.integers(0, 30, rng.integers(0, 10))
+            pr = int(rng.integers(0, 5))
+            on = bool(rng.integers(0, 2))
+            fast.set_priorities(keys, pr, only_new=on)
+            heap.set_priorities(keys.tolist(), pr, only_new=on)
+        else:
+            keys = rng.integers(0, 30, rng.integers(0, 10))
+            pr = int(rng.integers(0, 5))
+            fast.fetch_many(keys, pr)
+            heap.fetch_many(keys.tolist(), pr)
+        assert fast.score == heap.score, (seed, step)
+        assert fast.seq == heap.seq and fast.epoch == heap.epoch, (seed,
+                                                                  step)
+        assert len(fast) == len(heap), (seed, step)
+
+
+_ENGINE_ARGS = (st.integers(0, 2**31 - 1),   # seed
+                st.integers(1, 9),           # cap
+                st.integers(0, 5),           # eviction_speed
+                st.integers(3, 30))          # steps
+
+
+@settings(max_examples=15, deadline=None)
+@given(*_ENGINE_ARGS)
+def test_priority_engine_matches_heap(seed, cap, ev, n_steps):
+    _check_engine_vs_heap(seed, cap, ev, n_steps)
+
+
+@pytest.mark.slow
+@settings(max_examples=120, deadline=None)
+@given(*_ENGINE_ARGS)
+def test_priority_engine_matches_heap_deep(seed, cap, ev, n_steps):
+    _check_engine_vs_heap(seed, cap, ev, n_steps)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(0, 40))
+def test_engine_heap_slow_victim_for_victim(seed, cap, n_steps):
+    """Three-way Algorithm 1/2 protocol: array engine, heap reference, and
+    the literal O(capacity) transcription must evict the same victim at
+    every ``populate`` and agree on membership throughout."""
+    rng = np.random.default_rng(seed)
+    bufs = (RecMGBuffer(cap, 4), HeapRecMGBuffer(cap, 4),
+            SlowRecMGBuffer(cap, 4, clamp=False))
+    fast, heap, slow = bufs
+    for step in range(n_steps):
+        if rng.integers(0, 3) == 0 and len(heap):
+            victims = {b.populate() for b in bufs}
+            assert len(victims) == 1, (seed, step, victims)
+        else:
+            key = int(rng.integers(0, 25))
+            bit = int(rng.integers(0, 2))
+            if rng.integers(0, 2):
+                for b in bufs:
+                    b.load_embeddings([], [], [key])
+            else:
+                for b in bufs:
+                    b.load_embeddings([key], [bit], [])
+        assert set(fast.score) == set(heap.score) == set(slow.priority), \
+            (seed, step)
 
 
 # ---------------------------------------------------------------------------
