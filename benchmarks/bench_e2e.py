@@ -324,6 +324,74 @@ def sharded_placements(ctx: BenchContext, n_shards: int = 4):
         ctx.emit_percentiles("sharded", placement, res)
 
 
+def scenario_matrix(ctx: BenchContext):
+    """Beyond-paper workload-scenario matrix: every catalog scenario x
+    {lru, recmg} through the model-free scenario harness (identical
+    serving semantics, no dense forward) — per-scenario on-demand fetch
+    count, hit rate and p50/p95 batch latency, plus two gate rows:
+
+    * ``recmg_lru_on_demand_ratio_worst`` — worst-case ratio of recmg's
+      on-demand fetches to LRU's over the paper-target regimes (ceiling
+      metric: the ML policy must keep fetching less than LRU);
+    * ``adapt_recovery`` — post-switch steady-state hit rate of
+      drift-adaptive recmg on the diurnal regime relative to its
+      pre-switch steady state (floor metric: the ISSUE's acceptance bar
+      is 0.9 at the pinned test scale).
+    """
+    from repro.runtime.drift import DriftConfig
+    from repro.workloads import (PAPER_TARGET_SCENARIOS, SCENARIOS,
+                                 phase_steady_hit_rates, replay_scenario,
+                                 scenario)
+
+    n_acc = 16_384 if ctx.cfg.quick else 49_152
+    scale = dict(n_tables=8, rows_per_table=2048, n_accesses=n_acc, seed=0)
+    ratios = {}
+    for name in sorted(SCENARIOS):
+        per_policy = {}
+        for policy in ("lru", "recmg"):
+            res = replay_scenario(scenario(name, **scale), policy=policy,
+                                  capacity_frac=0.12, batch=512)
+            per_policy[policy] = res
+            ctx.emit("scenario", f"{name}_{policy}_on_demand",
+                     res["on_demand_rows"],
+                     f"hit rate {res['hit_rate']}")
+            ctx.emit("scenario", f"{name}_{policy}_p50_batch_ms",
+                     round(res["p50_batch_ms"], 3))
+            ctx.emit("scenario", f"{name}_{policy}_p95_batch_ms",
+                     round(res["p95_batch_ms"], 3))
+        r = (per_policy["recmg"]["on_demand_rows"]
+             / max(per_policy["lru"]["on_demand_rows"], 1))
+        ratios[name] = r
+        ctx.emit("scenario", f"{name}_recmg_lru_on_demand_ratio",
+                 round(r, 4), "paper direction: < 1 on target regimes")
+    worst = max(ratios[n] for n in PAPER_TARGET_SCENARIOS)
+    ctx.emit("scenario", "recmg_lru_on_demand_ratio_worst", round(worst, 4),
+             f"over {sorted(PAPER_TARGET_SCENARIOS)}; perf-gate ceiling")
+
+    # Drift-adaptation recovery row (diurnal, model frozen on phase 1).
+    spec = scenario("diurnal", n_tables=4, rows_per_table=512,
+                    n_accesses=16_384, seed=0)
+    kw = dict(policy="recmg", batch=256, profile_frac=0.25,
+              capacity_frac=0.12)
+    frozen = replay_scenario(spec, **kw)
+    adapt = replay_scenario(spec, adapt=True,
+                            adapt_cfg=DriftConfig(window=1024, hot_k=128),
+                            **kw)
+
+    n_phases = int(spec.param("n_phases"))
+    ph = phase_steady_hit_rates(adapt, n_phases)
+    pre, post = ph[0], ph[1:].mean()
+    ctx.emit("scenario", "adapt_recovery", round(post / max(pre, 1e-9), 4),
+             f"post-switch steady hit {post:.3f} vs pre {pre:.3f}; "
+             "perf-gate floor")
+    ctx.emit("scenario", "frozen_decay",
+             round(phase_steady_hit_rates(frozen, n_phases)[1:].mean()
+                   / max(pre, 1e-9), 4),
+             "same model without adaptation (the gap --adapt closes)")
+    ctx.emit("scenario", "adapt_triggers", adapt["drift"]["triggers"],
+             f"min jaccard {adapt['drift']['min_jaccard']}")
+
+
 def run(ctx: BenchContext):
     lookup_throughput(ctx)
     cfg, tr, cap, results, out_full = fig16_17_e2e(ctx)
@@ -332,3 +400,4 @@ def run(ctx: BenchContext):
     quantized_buffer_beyond_paper(ctx)
     multi_table_facade(ctx)
     sharded_placements(ctx)
+    scenario_matrix(ctx)

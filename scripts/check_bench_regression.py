@@ -12,6 +12,17 @@ Two metrics guard the serving hot path:
   independent: both sides run on the same box, so this is the true guard
   against the ML policy's bookkeeping creeping back onto the hot path).
 
+Two more guard the workload-scenario matrix (bench ``scenario``; both
+counter-derived, hence machine-independent):
+
+* ``recmg_lru_on_demand_ratio_worst`` — worst-case recmg/LRU on-demand
+  fetch ratio over the paper-target scenarios; a ceiling metric (the ML
+  policy must keep fetching less than LRU on the regimes the paper's
+  claim covers).
+* ``adapt_recovery`` — drift-adaptive recmg's post-switch steady-state
+  hit rate relative to pre-switch on the diurnal regime; a floor metric
+  (adaptation must keep recovering after a hot-set rotation).
+
 A metric regresses when it moves more than ``tolerance`` (default 30%)
 past its baseline in the bad direction.  Exit 1 on any regression —
 wired into the CI bench-smoke lane after the bench_e2e smoke.
@@ -54,7 +65,7 @@ def main(argv=None) -> int:
             return
         floor = want * (1.0 - tol)
         status = "OK" if got >= floor else "REGRESSION"
-        print(f"{status} {name}: measured {got:.1f} vs floor {floor:.1f} "
+        print(f"{status} {name}: measured {got:g} vs floor {floor:g} "
               f"(baseline {want}, tolerance {tol:.0%})")
         if got < floor:
             failures.append(name)
@@ -75,6 +86,9 @@ def main(argv=None) -> int:
     check_floor(("tentpole", "batched_lookup_rows_per_s"),
                 "batched_lookup_rows_per_s")
     check_ceiling(("fig16", "recmg_lru_p50_ratio"), "recmg_lru_p50_ratio")
+    check_ceiling(("scenario", "recmg_lru_on_demand_ratio_worst"),
+                  "recmg_lru_on_demand_ratio_worst")
+    check_floor(("scenario", "adapt_recovery"), "adapt_recovery")
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)

@@ -394,15 +394,37 @@ def attribute_prefetch_hits(seg: np.ndarray, hits: np.ndarray,
         return 0
     pf = np.fromiter(prefetched, np.int64, len(prefetched))
     pf.sort()
-    pos = np.searchsorted(pf, seg)
-    pos_c = np.minimum(pos, pf.size - 1)
-    present = np.flatnonzero(pf[pos_c] == seg)
+    present = np.flatnonzero(isin_sorted(pf, seg))
     if present.size == 0:
         return 0
     u, first = np.unique(seg[present], return_index=True)
     n_hit = int(np.count_nonzero(hits[present[first]]))
     prefetched.difference_update(u.tolist())
     return n_hit
+
+
+def top_ids_by_count(ids: np.ndarray, k: int) -> np.ndarray:
+    """The ``k`` most frequent ids of a stream, heat-ordered (hottest
+    first) with a deterministic tie-break on the id — the shared "what is
+    hot" definition used by the drift detector, the adaptation
+    controller's pool refresh and the frequency-heuristic model
+    (:func:`repro.core.recmg.frequency_outputs`); they must agree or the
+    detector and the refresh silently diverge."""
+    vals, counts = np.unique(np.asarray(ids, np.int64).ravel(),
+                             return_counts=True)
+    order = np.lexsort((vals, -counts))
+    return vals[order[: max(int(k), 0)]]
+
+
+def isin_sorted(sorted_vals: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Vectorized membership of ``keys`` in an already-sorted id array
+    (one ``searchsorted`` pass; empty-safe)."""
+    keys = np.asarray(keys, np.int64)
+    if sorted_vals.size == 0:
+        return np.zeros(keys.shape, bool)
+    pos = np.minimum(np.searchsorted(sorted_vals, keys),
+                     sorted_vals.size - 1)
+    return sorted_vals[pos] == keys
 
 
 @dataclass

@@ -68,6 +68,49 @@ def precompute_outputs(trace: Trace, caching=None, prefetch=None,
     return RecMGOutputs(starts, bits, ids)
 
 
+def frequency_outputs(trace: Trace, capacity: int, in_len: int = 15,
+                      out_len: int = 5,
+                      profile_upto: Optional[int] = None) -> RecMGOutputs:
+    """Frequency-heuristic RecMG outputs — a stand-in for the trained
+    models that needs no training and is fully deterministic.
+
+    The "model" is the access-frequency profile of the trace prefix up to
+    ``profile_upto`` (default: the whole trace): keep-bits mark trunk keys
+    that sit in the profile's ``capacity`` hottest ids, and each chunk
+    prefetches the next ``out_len`` ids of the hot list in heat order
+    (round-robin, so the hottest are re-prefetched most often).
+
+    Two jobs: (a) the scenario matrix's cheap recmg arm — on stationary
+    skewed regimes this protects the power-law head and beats LRU, like
+    the paper's trained caching model does; (b) the drift experiments'
+    *frozen phase-1 model* — profile only the pre-switch prefix
+    (``profile_upto``; 0 means an *empty* profile, i.e. a model that has
+    seen nothing) and the outputs keep ranking/prefetching stale rows
+    after the regime switches, reproducing the decay ``--adapt`` must
+    recover from."""
+    from repro.core.cache_sim import isin_sorted, top_ids_by_count
+
+    keys = trace.global_id.astype(np.int64)
+    n = len(keys)
+    prof = keys if profile_upto is None else keys[: profile_upto]
+    hot = top_ids_by_count(prof, max(1, int(capacity)))
+    hot_sorted = np.sort(hot)
+
+    # Only chunks whose trunk window fits entirely inside the trace (same
+    # chunk grid as precompute_outputs); a trace shorter than in_len has
+    # zero chunks rather than a ragged first one.  The stride equals the
+    # window, so chunk ci's trunk is exactly keys[ci*in_len:(ci+1)*in_len]
+    # and all bits come out of one membership pass.
+    starts = np.arange(in_len, n - out_len - 1, in_len)
+    c = len(starts)
+    bits = isin_sorted(hot_sorted, keys[: c * in_len].reshape(c, in_len))
+    if hot.size == 0:  # empty profile: nothing to rank or prefetch
+        return RecMGOutputs(starts, bits, np.zeros((c, 0), np.int64))
+    pf_idx = (np.arange(c)[:, None] * out_len
+              + np.arange(out_len)[None, :]) % hot.size
+    return RecMGOutputs(starts, bits, hot[pf_idx])
+
+
 def _replay_segment(access, seg: np.ndarray, res: SimResult,
                     prefetched: set):
     """Serve one chunk of demand accesses through a bulk-access callable

@@ -200,7 +200,14 @@ class ReferenceTieredStore:
         slots = self._admit(keys)
         self._write_rows(slots, rows)
         for k in keys:
-            self.prefetched.add(k)
+            # Only keys still resident get the mark: at capacity ~ 1 a
+            # later key of the same prefetch batch can evict an earlier
+            # one mid-`_admit`, and marking the evicted key would leak a
+            # phantom prefetch attribution onto its next residency (the
+            # batched store's per-slot ``_pf_flag`` can't leak this way —
+            # eviction clears the slot's flag by construction).
+            if k in self.slot_of:
+                self.prefetched.add(k)
 
     def modeled_batch_ms(self) -> float:
         """Analytic per-batch latency contribution of the slow tier."""

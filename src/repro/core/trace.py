@@ -186,6 +186,81 @@ def generate_trace(cfg: TraceGenConfig) -> Trace:
 
 
 # ---------------------------------------------------------------------------
+# Trace serialization: npz (exact dtypes) and csv (interoperable)
+# ---------------------------------------------------------------------------
+
+
+def save_trace(trace: Trace, path) -> None:
+    """Write a trace to ``path`` (format by suffix: ``.npz`` or ``.csv``).
+
+    Both formats round-trip byte-identically through :func:`load_trace`
+    (same arrays, same dtypes) — the contract the ``replay`` workload
+    regime and its property test rely on.  CSV carries one access per
+    line (``table_id,row_id[,query_id]``) with the per-table row counts
+    in a ``# rows_per_table=`` header comment, so external traces can be
+    dropped in from any tool that can write a text file.
+    """
+    from pathlib import Path
+
+    path = Path(path)
+    if path.suffix == ".npz":
+        payload = {"table_id": trace.table_id, "row_id": trace.row_id,
+                   "rows_per_table": trace.rows_per_table}
+        if trace.query_id is not None:
+            payload["query_id"] = trace.query_id
+        np.savez(path, **payload)
+        return
+    if path.suffix == ".csv":
+        rpt = ",".join(str(int(r)) for r in trace.rows_per_table)
+        cols = [trace.table_id, trace.row_id]
+        header = "table_id,row_id"
+        if trace.query_id is not None:
+            cols.append(trace.query_id)
+            header += ",query_id"
+        body = np.stack([c.astype(np.int64) for c in cols], axis=1)
+        with open(path, "w") as f:
+            f.write(f"# rows_per_table={rpt}\n{header}\n")
+            np.savetxt(f, body, fmt="%d", delimiter=",")
+        return
+    raise ValueError(f"unsupported trace format {path.suffix!r} "
+                     "(use .npz or .csv)")
+
+
+def load_trace(path) -> Trace:
+    """Read a trace written by :func:`save_trace` (or any external file in
+    the same layout).  Dtypes are restored exactly: ``table_id`` int32,
+    ``row_id`` int64, ``rows_per_table`` int64, ``query_id`` int32."""
+    from pathlib import Path
+
+    path = Path(path)
+    if path.suffix == ".npz":
+        with np.load(path) as z:
+            q = z["query_id"] if "query_id" in z.files else None
+            return Trace(z["table_id"].astype(np.int32),
+                         z["row_id"].astype(np.int64),
+                         z["rows_per_table"].astype(np.int64),
+                         None if q is None else q.astype(np.int32))
+    if path.suffix == ".csv":
+        with open(path) as f:
+            first = f.readline().strip()
+            if not first.startswith("# rows_per_table="):
+                raise ValueError(f"{path}: missing rows_per_table header")
+            rpt = np.asarray([int(x) for x in
+                              first.split("=", 1)[1].split(",")], np.int64)
+            header = f.readline().strip().split(",")
+            body = np.loadtxt(f, dtype=np.int64, delimiter=",", ndmin=2)
+        if body.size == 0:
+            body = body.reshape(0, len(header))
+        cols = {name: body[:, i] for i, name in enumerate(header)}
+        q = cols.get("query_id")
+        return Trace(cols["table_id"].astype(np.int32),
+                     cols["row_id"].astype(np.int64), rpt,
+                     None if q is None else q.astype(np.int32))
+    raise ValueError(f"unsupported trace format {path.suffix!r} "
+                     "(use .npz or .csv)")
+
+
+# ---------------------------------------------------------------------------
 # Locality statistics (paper §III)
 # ---------------------------------------------------------------------------
 

@@ -26,16 +26,25 @@ class DLRMDataConfig:
 
 
 def query_batches(cfg: DLRMDataConfig, trace: Optional[Trace] = None,
-                  n_batches: int = 100) -> Iterator[Dict[str, np.ndarray]]:
+                  n_batches: int = 100,
+                  workload=None) -> Iterator[Dict[str, np.ndarray]]:
     """Yields {dense (B,F), sparse (B,T,P), label (B,)} batches.
 
     With a trace, sparse ids replay its access stream (query-aligned);
-    otherwise ids are zipf-sampled directly.
+    ``workload`` (a :class:`~repro.workloads.spec.WorkloadSpec`) derives
+    the trace from a named scenario regime at this config's geometry;
+    otherwise ids come from the default calibrated generator.
     """
     rng = np.random.default_rng(cfg.seed)
     B, T, P = cfg.batch, cfg.n_tables, cfg.multi_hot
     per_batch = B * T * P
 
+    if trace is None and workload is not None:
+        from repro.workloads import make_trace
+
+        trace = make_trace(workload.with_(
+            n_tables=T, rows_per_table=cfg.rows_per_table,
+            n_accesses=n_batches * per_batch, seed=cfg.seed))
     if trace is None:
         tr_cfg = TraceGenConfig(
             n_tables=T, rows_per_table=cfg.rows_per_table,

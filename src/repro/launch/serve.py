@@ -35,7 +35,8 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
                 shards: int = 0, placement: str = "table",
                 async_prefetch: bool = False, pipeline_depth: int = 2,
                 scheduler: str = "inline", interarrival_us: float = 0.0,
-                compute_us: Optional[float] = None, log=None) -> Dict:
+                compute_us: Optional[float] = None, adapt: bool = False,
+                adapt_cfg=None, log=None) -> Dict:
     """Replay a trace as DLRM inference batches through the tiered store.
 
     ``multi_table=True`` serves through the per-table facade (one batched
@@ -58,7 +59,15 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     *k-1*'s dense forward on the modeled timeline.  With the default
     ``"inline"`` scheduler the store sees the exact same operation
     sequence as the synchronous path (identical hit/miss/eviction
-    counters); only the on-demand fetch *stall* accounting changes."""
+    counters); only the on-demand fetch *stall* accounting changes.
+
+    ``adapt=True`` attaches a drift-adaptive controller
+    (:class:`~repro.runtime.drift.AdaptiveController`): windowed
+    hit-rate + hot-set-Jaccard telemetry over the live stream, and on a
+    drift trigger the caching/prefetch model *features* are refreshed
+    online (hot-pool rebuild + per-chunk re-rank + prefetch of the
+    newly-hot rows), staged through the normal model-output path.  The
+    result dict gains a ``"drift"`` telemetry key."""
     T, P = cfg.n_tables, cfg.multi_hot
     per_batch = batch_queries * T * P
     host_rows = int(trace.rows_per_table.sum())
@@ -94,6 +103,15 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     n_batches = len(gid) // per_batch
     chunk_state = {"ptr": 0}
     compute = {"s": 0.0}
+
+    controller = None
+    if adapt:
+        from repro.runtime.drift import AdaptiveController, DriftConfig
+
+        if adapt_cfg is None:
+            adapt_cfg = DriftConfig(window=max(1024, 4 * per_batch),
+                                    hot_k=min(capacity, 256))
+        controller = AdaptiveController(store, capacity, adapt_cfg)
 
     def staged_for_batch(b):
         """Model outputs to stage after batch ``b``: caching priorities for
@@ -153,7 +171,8 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         rt = PipelinedRuntime(store, RuntimeConfig(
             max_batch=batch_queries, pipeline_depth=pipeline_depth,
             interarrival_us=interarrival_us, scheduler=scheduler,
-            fetch_us_per_row=fetch_us_per_row, compute_us=compute_us))
+            fetch_us_per_row=fetch_us_per_row, compute_us=compute_us),
+            batch_hook=controller.on_batch if controller else None)
 
         def step(b, emb):
             c = forward_batch(emb)
@@ -170,6 +189,7 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         lat = []
         for b in range(n_batches):
             ids = gid[b * per_batch: (b + 1) * per_batch]
+            pre_hits = store.stats.hits
             t0 = time.perf_counter()
             emb = store.lookup(ids)  # (per_batch, D)
             forward_batch(emb)
@@ -181,6 +201,12 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
             # accounting.
             for item in staged_for_batch(b):
                 store.stage_model_outputs(*item)
+            if controller is not None:
+                # Adaptation items stage after the model's: the fresh
+                # re-ranks must win over stale ones at the next drain.
+                for item in controller.on_batch(
+                        ids, store.stats.hits - pre_hits, b):
+                    store.stage_model_outputs(*item)
             store.flush_staged()
             if log and b % 10 == 0:
                 log(f"batch {b}: {lat[-1]*1e3:.1f} ms "
@@ -216,6 +242,8 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         # Synchronous serving: every on-demand fetch sits on the critical
         # path, so the stall is the whole modeled slow-tier cost.
         st["on_demand_stall_ms"] = round(store.stats.modeled_fetch_s * 1e3, 3)
+    if controller is not None:
+        st["drift"] = controller.as_dict()
     if multi_table:
         st["per_table_hit_rates"] = [
             round(h, 4) for h in store.per_table_hit_rates()]
@@ -271,16 +299,36 @@ def main(argv=None):
                     choices=["inline", "thread"],
                     help="prefetch-engine scheduler: inline is "
                          "deterministic, thread overlaps wall-clock")
+    ap.add_argument("--workload", default="",
+                    help="serve a named workload scenario instead of the "
+                         "default calibrated trace: a catalog name "
+                         "(zipf_hot, diurnal, flash_crowd, multi_tenant, "
+                         "churn, ...) or 'regime:key=val,...' — e.g. "
+                         "'diurnal:n_phases=6' or 'replay:path=tr.npz'")
+    ap.add_argument("--adapt", action="store_true",
+                    help="drift-adaptive serving: windowed hit-rate + "
+                         "hot-set-Jaccard drift detector, online refresh "
+                         "of the caching/prefetch features on trigger")
     args = ap.parse_args(argv)
 
     cfg = get_config("dlrm-recmg").reduced()
     params = init_dlrm(jax.random.PRNGKey(0), cfg)
 
-    tr_cfg = TraceGenConfig(
-        n_tables=cfg.n_tables, rows_per_table=cfg.rows_per_table,
-        n_accesses=args.accesses, drift_every=10**9,
-    )
-    trace = generate_trace(tr_cfg)
+    if args.workload:
+        from repro.workloads import make_trace, parse_workload
+
+        spec = parse_workload(args.workload)
+        if spec.regime != "replay":  # replay: the file's geometry wins
+            spec = spec.with_(n_tables=cfg.n_tables,
+                              rows_per_table=cfg.rows_per_table,
+                              n_accesses=args.accesses)
+        trace = make_trace(spec)
+    else:
+        tr_cfg = TraceGenConfig(
+            n_tables=cfg.n_tables, rows_per_table=cfg.rows_per_table,
+            n_accesses=args.accesses, drift_every=10**9,
+        )
+        trace = generate_trace(tr_cfg)
     capacity = int(args.capacity_frac * trace.unique_count())
 
     outputs = None
@@ -315,7 +363,7 @@ def main(argv=None):
                       shards=args.shards, placement=args.placement,
                       async_prefetch=args.async_prefetch,
                       pipeline_depth=args.pipeline_depth,
-                      scheduler=args.scheduler, log=print)
+                      scheduler=args.scheduler, adapt=args.adapt, log=print)
     print({k: v for k, v in res.items()})
     return res
 

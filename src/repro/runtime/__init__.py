@@ -2,6 +2,8 @@
 micro-batching request pipeline, telemetry).  See docs/architecture.md
 ("Serving runtime") for the determinism contract."""
 from repro.runtime.clock import Clock, VirtualClock, WallClock
+from repro.runtime.drift import (AdaptiveController, DriftConfig,
+                                 DriftDetector)
 from repro.runtime.pipeline import (MicroBatcher, PipelinedRuntime, Request,
                                     RuntimeConfig)
 from repro.runtime.prefetch_engine import (PrefetchEngine,
@@ -10,6 +12,7 @@ from repro.runtime.telemetry import RuntimeTelemetry, latency_percentiles
 
 __all__ = [
     "Clock", "VirtualClock", "WallClock",
+    "AdaptiveController", "DriftConfig", "DriftDetector",
     "MicroBatcher", "PipelinedRuntime", "Request", "RuntimeConfig",
     "PrefetchEngine", "heuristic_prediction_stream",
     "RuntimeTelemetry", "latency_percentiles",

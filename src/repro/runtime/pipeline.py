@@ -124,10 +124,17 @@ class PipelinedRuntime:
     """
 
     def __init__(self, store, cfg: Optional[RuntimeConfig] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, batch_hook=None):
+        """``batch_hook(ids, hits, batch_index) -> [(trunk, bits,
+        prefetch_ids), ...]`` is called once per processed batch with the
+        batch's ids and its fast-tier hit count; returned items are
+        submitted through the prefetch engine like staged model outputs.
+        The drift-adaptive serving path passes
+        :meth:`~repro.runtime.drift.AdaptiveController.on_batch` here."""
         self.store = store
         self.cfg = cfg or RuntimeConfig()
         self.clock = clock or VirtualClock()
+        self._batch_hook = batch_hook
         self.telemetry = RuntimeTelemetry()
         self.engine = PrefetchEngine(
             store, telemetry=self.telemetry, clock=self.clock,
@@ -201,6 +208,7 @@ class PipelinedRuntime:
         if cfg.scheduler == "inline":
             self.engine.drain()  # the deterministic pre-lookup drain point
         pre_fetch_s = self.store.stats.modeled_fetch_s
+        pre_hits = self.store.stats.hits
         # Wall timing covers lookup + the reported forward time only, so
         # the measured window matches the synchronous loop, which stages,
         # packages and flushes model outputs outside its timed window.
@@ -238,6 +246,12 @@ class PipelinedRuntime:
         # pipelined during the batch; their outputs land afterwards).
         for trunk, bits, pf in staged:
             self.engine.submit(trunk, bits, pf, now_us=compute_done)
+        # Drift-adaptation hook: refresh items land after the model's, so
+        # fresh re-ranks override stale ones at the next drain.
+        if self._batch_hook is not None:
+            hits = self.store.stats.hits - pre_hits
+            for trunk, bits, pf in self._batch_hook(ids, hits, b) or ():
+                self.engine.submit(trunk, bits, pf, now_us=compute_done)
 
     # ---------------- results ----------------
 

@@ -1,0 +1,24 @@
+"""Workload scenario subsystem: named, seeded, composable access-pattern
+regimes behind one ``WorkloadSpec -> trace / iterator-of-batches`` API.
+
+See :mod:`repro.workloads.spec` for the API, :mod:`repro.workloads.regimes`
+for the generator taxonomy, :mod:`repro.workloads.replay` for the external
+trace adapter and :mod:`repro.workloads.harness` for the model-free serving
+replay used by the scenario regression matrix and the benchmarks.
+"""
+from repro.workloads import regimes as _regimes  # noqa: F401  (registers)
+from repro.workloads import replay as _replay  # noqa: F401  (registers)
+from repro.workloads.harness import (GOLDEN_KEYS, build_store,
+                                     golden_metrics, phase_steady_hit_rates,
+                                     replay_scenario)
+from repro.workloads.spec import (DRIFT_SCENARIOS, PAPER_TARGET_SCENARIOS,
+                                  REGIMES, SCENARIOS, WorkloadSpec,
+                                  iter_batches, make_spec, make_trace,
+                                  parse_workload, scenario)
+
+__all__ = [
+    "DRIFT_SCENARIOS", "GOLDEN_KEYS", "PAPER_TARGET_SCENARIOS", "REGIMES",
+    "SCENARIOS", "WorkloadSpec", "build_store", "golden_metrics",
+    "iter_batches", "make_spec", "make_trace", "parse_workload",
+    "phase_steady_hit_rates", "replay_scenario", "scenario",
+]

@@ -1,0 +1,155 @@
+"""Model-free scenario serving harness: replay a workload spec through a
+tiered store (single-worker or sharded) exactly like ``serve_trace`` does
+— same batched lookups, same one-prefetch-set-per-batch Algorithm-1
+staging, same optional drift adaptation — but without the DLRM dense
+forward or any model training.  That keeps a full scenario matrix cell to
+tens of milliseconds, so the regression tests can afford
+``regime x policy x shard-count`` and the bench can afford per-scenario
+rows.
+
+The recmg arm uses :func:`repro.core.recmg.frequency_outputs` (the
+deterministic frequency-heuristic stand-in for the trained models);
+``profile_frac < 1`` freezes that profile on a trace prefix — the
+frozen-model decay arm of the drift experiments.
+
+Counters returned here are exactly the store's ``TierStats`` (plus drift
+telemetry when ``adapt=True``), so golden files pin the same quantities
+as the full ``serve_trace`` goldens.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.recmg import frequency_outputs
+from repro.core.tiered import TieredEmbeddingStore
+from repro.runtime.drift import AdaptiveController, DriftConfig
+from repro.workloads.spec import WorkloadSpec, iter_batches, make_trace
+
+# Deterministic serve metrics a golden file may pin (no wall-clock).
+GOLDEN_KEYS = ("regime", "policy", "batches", "lookups", "hits", "hit_rate",
+               "prefetch_hits", "on_demand_rows", "evictions",
+               "modeled_fetch_ms_per_batch")
+
+
+def build_store(host: np.ndarray, rows_per_table: np.ndarray, capacity: int,
+                policy: str, shards: int = 0, placement: str = "table",
+                fetch_us_per_row: float = 10.0,
+                warmup_batch: Optional[int] = None):
+    """The same store-selection switch ``serve_trace`` uses (shards=0 ->
+    single worker)."""
+    if shards:
+        from repro.core.sharded_serving import ShardedTieredStore
+
+        return ShardedTieredStore.build(
+            host, rows_per_table, shards, placement, capacity=capacity,
+            policy=policy, fetch_us_per_row=fetch_us_per_row,
+            warmup_batch=warmup_batch)
+    return TieredEmbeddingStore(
+        host, capacity, policy=policy, fetch_us_per_row=fetch_us_per_row,
+        warmup_batch=warmup_batch)
+
+
+def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
+                    capacity_frac: float = 0.12, batch: int = 256,
+                    shards: int = 0, placement: str = "table",
+                    adapt: bool = False,
+                    adapt_cfg: Optional[DriftConfig] = None,
+                    profile_frac: float = 1.0, emb_dim: int = 8,
+                    capacity: Optional[int] = None,
+                    in_len: int = 15, out_len: int = 5) -> Dict:
+    """Serve one scenario end to end; returns the metrics dict.
+
+    ``policy`` is ``"lru"`` or ``"recmg"`` (recmg gets frequency-heuristic
+    model outputs profiled on the first ``profile_frac`` of the trace).
+    ``adapt=True`` attaches an :class:`AdaptiveController` whose refresh
+    items are staged through the same model-output path.
+    """
+    trace = make_trace(spec)
+    cap = int(capacity) if capacity else max(
+        4, int(capacity_frac * trace.unique_count()))
+    host = np.random.default_rng(0).normal(
+        size=(trace.n_vectors, emb_dim)).astype(np.float32)
+    store = build_store(host, trace.rows_per_table, cap, policy,
+                        shards=shards, placement=placement,
+                        warmup_batch=batch)
+    outputs = None
+    if policy == "recmg":
+        upto = (int(profile_frac * len(trace))
+                if profile_frac < 1.0 else None)
+        outputs = frequency_outputs(trace, cap, in_len=in_len,
+                                    out_len=out_len, profile_upto=upto)
+
+    controller = None
+    if adapt:
+        if adapt_cfg is None:
+            adapt_cfg = DriftConfig(window=max(512, 4 * batch),
+                                    hot_k=min(cap, 256))
+        controller = AdaptiveController(store, cap, adapt_cfg)
+
+    gid = trace.global_id
+    chunk_ptr = 0
+    lat, batch_hit_rates = [], []
+    empty = np.empty(0, np.int64)
+    for b, ids in enumerate(iter_batches(spec, batch, trace=trace)):
+        pre_hits = store.stats.hits
+        t0 = time.perf_counter()
+        store.lookup(ids)
+        lat.append(time.perf_counter() - t0)
+        hits = store.stats.hits - pre_hits
+        batch_hit_rates.append(hits / max(ids.size, 1))
+        # Stage the chunks this batch covered — caching ranks for every
+        # chunk, prefetches only from the most recent one (serve_trace's
+        # one-prefetch-set-per-batch rule, paper Fig. 6).
+        if outputs is not None:
+            hi = (b + 1) * batch
+            last_pf = None
+            while (chunk_ptr < len(outputs.chunk_starts)
+                   and outputs.chunk_starts[chunk_ptr] < hi):
+                s = int(outputs.chunk_starts[chunk_ptr])
+                trunk = gid[max(0, s - in_len): s]
+                bits = outputs.caching_bits[chunk_ptr]
+                store.stage_model_outputs(trunk, bits, empty)
+                last_pf = outputs.prefetch_ids[chunk_ptr]
+                chunk_ptr += 1
+            if last_pf is not None:
+                store.stage_model_outputs(empty, empty,
+                                          np.asarray(last_pf, np.int64))
+        if controller is not None:
+            for item in controller.on_batch(ids, hits, b):
+                store.stage_model_outputs(*item)
+        store.flush_staged()
+
+    res = store.stats.as_dict()
+    res.update(
+        regime=spec.regime, policy=policy, capacity=cap,
+        n_accesses=len(trace), shards=shards,
+        p50_batch_ms=float(np.percentile(lat, 50) * 1e3) if lat else 0.0,
+        p95_batch_ms=float(np.percentile(lat, 95) * 1e3) if lat else 0.0,
+        modeled_fetch_ms_per_batch=store.modeled_batch_ms(),
+        batch_hit_rates=batch_hit_rates,
+    )
+    if shards:
+        res["shard"] = store.shard_telemetry()
+    if controller is not None:
+        res["drift"] = controller.as_dict()
+    return res
+
+
+def golden_metrics(res: Dict) -> Dict:
+    """The deterministic subset of a :func:`replay_scenario` result that a
+    golden file pins (counters + cost model; no wall-clock, no series)."""
+    return {k: res[k] for k in GOLDEN_KEYS}
+
+
+def phase_steady_hit_rates(res: Dict, n_phases: int) -> np.ndarray:
+    """Mean hit rate over the steady (second) half of each of ``n_phases``
+    equal phases of a :func:`replay_scenario` result — the pre/post-switch
+    comparison the drift tests, the adaptation example and the
+    ``adapt_recovery`` bench row all share (one definition, so the
+    acceptance bar and the gate measure the same thing)."""
+    hr = np.asarray(res["batch_hit_rates"])
+    hr = hr[: len(hr) - len(hr) % n_phases].reshape(n_phases, -1)
+    return hr[:, hr.shape[1] // 2:].mean(axis=1)

@@ -1,0 +1,196 @@
+"""Drift detector + drift-adaptive serving tests.
+
+Hand-built access streams pin the detector's trigger/no-trigger behavior
+and its telemetry counters (step change fires, slow churn under the
+threshold and stationary streams don't), and the acceptance-criterion
+test replays the diurnal drift regime: with ``adapt`` on, recmg's
+post-switch steady-state hit rate must recover to within 10% of its
+pre-switch steady state (the frozen model, by contrast, stays degraded).
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.drift import AdaptiveController, DriftConfig, DriftDetector
+
+CFG = DriftConfig(window=100, hot_k=10, jaccard_min=0.35, hitrate_drop=0.12,
+                  warmup_windows=2, cooldown_windows=1)
+
+
+def _feed(det, ids, hit_rate=0.9, batch=20):
+    """Feed a flat id stream as fixed-size batches with a given hit rate;
+    returns the windows at which the detector fired."""
+    fired = []
+    for b in range(len(ids) // batch):
+        chunk = ids[b * batch: (b + 1) * batch]
+        if det.observe(chunk, int(round(hit_rate * len(chunk)))):
+            fired.append(det.windows)
+    return fired
+
+
+def test_no_change_never_triggers():
+    det = DriftDetector(CFG)
+    ids = np.tile(np.arange(10), 80)  # same 10-key hot set every window
+    assert _feed(det, ids) == []
+    t = det.as_dict()
+    assert t["windows"] == 8 and t["triggers"] == 0
+    assert t["last_jaccard"] == 1.0 and t["min_jaccard"] == 1.0
+    assert t["accesses"] == 800
+    assert t["last_window_hit_rate"] == pytest.approx(0.9)
+
+
+def test_step_change_triggers_jaccard_once():
+    det = DriftDetector(CFG)
+    ids = np.concatenate([np.tile(np.arange(10), 40),        # 4 windows old
+                          np.tile(np.arange(100, 110), 40)])  # 4 windows new
+    fired = _feed(det, ids)
+    t = det.as_dict()
+    # Exactly one trigger, at the first full post-switch window (window 5),
+    # with the hot sets fully disjoint there.
+    assert fired == [5]
+    assert t["jaccard_triggers"] == 1 and t["triggers"] == 1
+    assert t["min_jaccard"] == 0.0
+    # After the switch the hot set is stable again: no re-triggering.
+    assert t["last_jaccard"] == 1.0
+
+
+def test_slow_churn_stays_below_threshold():
+    """One hot id rotates out per window: Jaccard 9/11 ~ 0.82 >> 0.35."""
+    det = DriftDetector(CFG)
+    fired = []
+    for w in range(8):
+        ids = np.tile(np.arange(w, w + 10), 10)
+        if det.observe(ids, int(0.9 * len(ids))):
+            fired.append(det.windows)
+    assert fired == []
+    t = det.as_dict()
+    assert t["triggers"] == 0
+    assert t["last_jaccard"] == pytest.approx(9 / 11, abs=1e-3)
+
+
+def test_hit_rate_drop_triggers_without_hotset_motion():
+    """Same keys, collapsing hit rate (e.g. capacity stolen by a co-tenant):
+    the symptom signal fires even though the Jaccard signal is blind."""
+    det = DriftDetector(CFG)
+    ids = np.arange(100)
+    for _ in range(3):
+        det.observe(ids, 90)  # baseline windows at 0.9
+    fired = det.observe(ids, 40)  # 0.4 << 0.9 - 0.12
+    t = det.as_dict()
+    assert fired and t["hitrate_triggers"] == 1 and t["jaccard_triggers"] == 0
+    assert t["last_window_hit_rate"] == pytest.approx(0.4)
+    # The post-drift rate is adopted as the new baseline: holding at 0.4
+    # does not re-trigger...
+    assert not det.observe(ids, 40)
+    assert not det.observe(ids, 40)
+    # ...but a second collapse does (cooldown of 1 window has passed).
+    assert det.observe(ids, 10)
+    assert det.as_dict()["hitrate_triggers"] == 2
+
+
+def test_warmup_and_cooldown_suppress_triggers():
+    det = DriftDetector(CFG)
+    # A switch inside the warmup (first two windows) must not fire.
+    det.observe(np.tile(np.arange(10), 10), 90)
+    fired = det.observe(np.tile(np.arange(50, 60), 10), 90)
+    assert not fired and det.as_dict()["triggers"] == 0
+    # Post-warmup switch fires; an immediate second switch is inside the
+    # cooldown window and is suppressed; the one after fires again.
+    det.observe(np.tile(np.arange(50, 60), 10), 90)       # window 3
+    assert det.observe(np.tile(np.arange(100, 110), 10), 90)   # fires
+    assert not det.observe(np.tile(np.arange(200, 210), 10), 90)  # cooldown
+    assert det.observe(np.tile(np.arange(300, 310), 10), 90)   # re-armed
+    assert det.as_dict()["triggers"] == 2
+
+
+class _FakeStore:
+    def __init__(self, resident):
+        self.resident = set(resident)
+
+    def resident_mask(self, ids):
+        return np.asarray([int(i) in self.resident for i in ids])
+
+
+def test_controller_refresh_items_protect_and_prefetch():
+    """On trigger the controller enters online mode: it prefetches the
+    hot non-resident rows, and from then on re-ranks every batch's chunk
+    against the live pool (hot -> keep-bit 1)."""
+    store = _FakeStore(resident=range(100, 105))
+    ctl = AdaptiveController(store, capacity=10, cfg=CFG)
+    old = np.tile(np.arange(10), 10)
+    new = np.tile(np.arange(100, 110), 10)
+    for _ in range(3):
+        assert ctl.on_batch(old, 90) == []  # pre-drift: model untouched
+    items = ctl.on_batch(new, 10)
+    assert ctl.detector.triggers == 1 and ctl.refreshes == 1
+    # One prefetch item for the non-resident hot rows + one re-rank item.
+    (_, _, pf), (trunk, bits, _) = items
+    assert set(pf.tolist()) == set(range(105, 110))
+    assert np.array_equal(trunk, np.arange(100, 110))
+    assert bits.all()  # whole chunk is in the live hot pool
+    # Next batch: pool exists -> re-rank continues without a new trigger.
+    items = ctl.on_batch(np.tile(np.arange(100, 110), 10), 90)
+    assert ctl.detector.triggers == 1
+    assert any(t.size for t, _, _ in items)
+    d = ctl.as_dict()
+    assert d["refreshes"] >= 1 and d["rerank_rows"] >= 20
+
+
+# ---------------------------------------------------------------------------
+# Acceptance criterion: --adapt recovers recmg after a regime switch
+# ---------------------------------------------------------------------------
+
+
+def test_adapt_recovers_hit_rate_after_regime_switch():
+    from repro.runtime.drift import DriftConfig as DC
+    from repro.workloads import (phase_steady_hit_rates, replay_scenario,
+                                 scenario)
+
+    spec = scenario("diurnal", n_tables=4, rows_per_table=512,
+                    n_accesses=12288, seed=0, n_phases=2)
+    kw = dict(policy="recmg", batch=256, profile_frac=0.5,
+              capacity_frac=0.12)
+    frozen = replay_scenario(spec, **kw)
+    adapt = replay_scenario(spec, adapt=True,
+                            adapt_cfg=DC(window=1024, hot_k=128), **kw)
+    pre_f, post_f = phase_steady_hit_rates(frozen, 2)
+    pre_a, post_a = phase_steady_hit_rates(adapt, 2)
+    assert pre_a == pytest.approx(pre_f)  # identical until the switch
+    # The frozen model decays materially after the switch...
+    assert post_f < pre_f - 0.05
+    # ...while adaptation recovers to within 10% of the pre-switch steady
+    # state (the ISSUE's acceptance bar) and beats frozen outright.
+    assert post_a >= 0.9 * pre_a
+    assert post_a > post_f + 0.05
+    assert adapt["drift"]["triggers"] >= 1
+    assert adapt["drift"]["refreshes"] >= 1
+
+
+def test_adapt_wired_through_pipelined_runtime():
+    """The PipelinedRuntime batch hook must deliver adaptation items
+    through the prefetch engine — counters move exactly as if the items
+    had been staged synchronously."""
+    from repro.core.tiered import TieredEmbeddingStore
+    from repro.runtime import PipelinedRuntime, RuntimeConfig
+
+    rng = np.random.default_rng(0)
+    host = rng.normal(size=(64, 8)).astype(np.float32)
+    store = TieredEmbeddingStore(host, 16, policy="lru")
+    calls = []
+
+    def hook(ids, hits, b):
+        calls.append((ids.size, hits, b))
+        return [(np.empty(0, np.int64), np.empty(0, np.int64),
+                 np.asarray([60, 61], np.int64))]
+
+    rt = PipelinedRuntime(store, RuntimeConfig(max_batch=4, compute_us=10.0),
+                          batch_hook=hook)
+    ids = np.arange(24).reshape(12, 2)  # 12 requests -> 3 batches of 4
+    rt.run(iter(ids), lambda b, emb: (0.0, []))
+    assert [c[2] for c in calls] == [0, 1, 2]  # one hook call per batch
+    assert all(c[0] == 8 for c in calls)
+    # The hook's prefetch items landed: 60/61 resident without a demand
+    # access, flagged as prefetched.
+    assert store.resident_mask(np.asarray([60, 61])).all()
+    hits_before = store.stats.prefetch_hits
+    store.lookup(np.asarray([60, 61]))
+    assert store.stats.prefetch_hits == hits_before + 2

@@ -93,7 +93,8 @@ def _check_batched_vs_reference(seed, n_rows, cap, batch, policy_bit,
 
 _BATCHED_ARGS = (st.integers(0, 2**31 - 1),   # seed
                  st.integers(24, 160),        # n_rows
-                 st.integers(2, 48),          # cap
+                 st.integers(1, 48),          # cap (1 included since the
+                 #   reference's own-batch prefetch-mark leak was fixed)
                  st.integers(8, 56),          # batch
                  st.integers(0, 1),           # policy bit
                  st.integers(0, 3),           # bits_every (0 = never)

@@ -79,6 +79,31 @@ def test_batch_overflow_matches_reference(policy):
     new.check_invariants()
 
 
+@pytest.mark.parametrize("policy,cap", [
+    ("lru", 1), ("recmg", 1), ("lru", 2), ("recmg", 2),
+])
+def test_capacity_one_prefetch_matches_reference(policy, cap):
+    """Regression for the PR-4 reference deviation: a multi-key prefetch
+    batch at capacity ~1 evicts its own earlier keys mid-admission, and
+    the reference used to leave those keys a phantom ``prefetched`` mark
+    that inflated ``prefetch_hits`` on their next residency.  With the
+    mark scoped to still-resident keys the engines agree at every
+    capacity — the property suite's cap range now starts at 1 instead of
+    having to avoid it."""
+    rng = np.random.default_rng(5)
+    host = rng.normal(size=(40, 8)).astype(np.float32)
+    ids = _trace(rng, 40, 1200, zipf_a=1.3)
+    new = TieredEmbeddingStore(host, cap, policy=policy)
+    ref = ReferenceTieredStore(host, cap, policy=policy)
+    s_new = _replay(new, host, ids, 8, np.random.default_rng(6),
+                    prefetch_every=2, bits_every=3)
+    s_ref = _replay(ref, host, ids, 8, np.random.default_rng(6),
+                    prefetch_every=2, bits_every=3)
+    assert s_new == s_ref
+    new.check_invariants()
+    assert set(new.slot_of) == set(ref.slot_of)
+
+
 def test_quantized_counters_match_reference():
     rng = np.random.default_rng(3)
     host = rng.normal(size=(200, 8)).astype(np.float32)

@@ -1,0 +1,207 @@
+"""Property tests for the workload scenario subsystem.
+
+Invariants (fuzzed via hypothesis, or the deterministic shim fallback):
+
+* every ``WorkloadSpec`` yields ids inside the spec's table bounds;
+* ``iter_batches`` respects batch size and trace length *exactly*
+  (``n_accesses // batch`` batches of exactly ``batch`` ids);
+* equal specs produce byte-identical traces (seeded determinism);
+* the ``replay`` adapter round-trips a trace written by
+  ``repro.core.trace.save_trace`` byte-identically, for both the ``.npz``
+  and ``.csv`` formats, arrays and dtypes alike.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+from repro.core.trace import (TraceGenConfig, generate_trace, load_trace,
+                              save_trace)
+from repro.workloads import (REGIMES, SCENARIOS, iter_batches, make_spec,
+                             make_trace, parse_workload, scenario)
+
+GEN_REGIMES = sorted(set(REGIMES) - {"replay"})
+
+
+def _spec_from(regime_idx, n_tables, rows, accesses, seed):
+    return make_spec(GEN_REGIMES[regime_idx % len(GEN_REGIMES)],
+                     n_tables=n_tables, rows_per_table=rows,
+                     n_accesses=accesses, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, len(GEN_REGIMES) - 1),  # regime
+       st.integers(1, 6),                     # n_tables
+       st.integers(16, 600),                  # rows_per_table
+       st.integers(50, 4000),                 # n_accesses
+       st.integers(0, 2**31 - 1))             # seed
+def test_spec_bounds_and_determinism(regime_idx, n_tables, rows, accesses,
+                                     seed):
+    spec = _spec_from(regime_idx, n_tables, rows, accesses, seed)
+    tr = make_trace(spec)
+    assert len(tr) == accesses
+    assert tr.table_id.dtype == np.int32 and tr.row_id.dtype == np.int64
+    assert tr.table_id.min() >= 0 and tr.table_id.max() < n_tables
+    assert tr.row_id.min() >= 0 and tr.row_id.max() < rows
+    assert tr.global_id.max() < spec.n_vectors
+    tr2 = make_trace(spec)
+    assert np.array_equal(tr.table_id, tr2.table_id)
+    assert np.array_equal(tr.row_id, tr2.row_id)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, len(GEN_REGIMES) - 1),
+       st.integers(40, 1500),   # n_accesses
+       st.integers(1, 97),      # batch
+       st.integers(0, 1000))    # seed
+def test_iter_batches_exact(regime_idx, accesses, batch, seed):
+    spec = _spec_from(regime_idx, 3, 64, accesses, seed)
+    tr = make_trace(spec)
+    batches = list(iter_batches(spec, batch))
+    assert len(batches) == accesses // batch
+    assert all(b.shape == (batch,) for b in batches)
+    if batches:
+        # The batches are exactly the trace's global-id stream, in order.
+        assert np.array_equal(np.concatenate(batches),
+                              tr.global_id[: len(batches) * batch])
+
+
+@pytest.mark.parametrize("fmt", ["npz", "csv"])
+def test_replay_roundtrips_generated_trace(tmp_path, fmt):
+    """A trace written by generate_trace must replay byte-identically
+    through both serialization formats and the workload API."""
+    tr = generate_trace(TraceGenConfig(n_tables=3, rows_per_table=50,
+                                       n_accesses=700, seed=4))
+    path = tmp_path / f"trace.{fmt}"
+    save_trace(tr, path)
+    back = load_trace(path)
+    for field in ("table_id", "row_id", "rows_per_table", "query_id"):
+        a, b = getattr(tr, field), getattr(back, field)
+        assert a.dtype == b.dtype, field
+        assert np.array_equal(a, b), field
+
+    spec = make_spec("replay", path=str(path), n_accesses=0)
+    replayed = make_trace(spec)
+    assert np.array_equal(replayed.global_id, tr.global_id)
+    assert np.array_equal(replayed.rows_per_table, tr.rows_per_table)
+    # Batch iteration over the replay == slicing the original stream.
+    bs = list(iter_batches(spec, 64, trace=replayed))
+    assert np.array_equal(np.concatenate(bs),
+                          tr.global_id[: len(bs) * 64])
+
+
+def test_replay_prefix_truncation(tmp_path):
+    tr = generate_trace(TraceGenConfig(n_tables=2, rows_per_table=40,
+                                       n_accesses=300, seed=1))
+    path = tmp_path / "t.npz"
+    save_trace(tr, path)
+    spec = make_spec("replay", path=str(path), n_accesses=120)
+    assert len(make_trace(spec)) == 120
+
+
+def test_trace_io_rejects_unknown_format(tmp_path):
+    tr = generate_trace(TraceGenConfig(n_tables=2, rows_per_table=16,
+                                       n_accesses=50, seed=0))
+    with pytest.raises(ValueError):
+        save_trace(tr, tmp_path / "t.parquet")
+    with pytest.raises(ValueError):
+        load_trace(tmp_path / "t.parquet")
+
+
+def test_scenario_catalog_instantiates():
+    for name in SCENARIOS:
+        spec = scenario(name, n_tables=2, rows_per_table=32,
+                        n_accesses=200, seed=7)
+        tr = make_trace(spec)
+        assert len(tr) == 200 and tr.n_tables == 2
+
+
+def test_parse_workload():
+    spec = parse_workload("diurnal:n_phases=6,hot_frac=0.1,seed=3")
+    assert spec.regime == "diurnal" and spec.seed == 3
+    assert spec.param("n_phases") == 6
+    assert spec.param("hot_frac") == pytest.approx(0.1)
+    assert spec.param("p_hot") == pytest.approx(0.9)  # catalog default kept
+    assert parse_workload("stationary:zipf_a=1.3").regime == "stationary"
+    assert parse_workload("replay:path=x.npz").param("path") == "x.npz"
+    with pytest.raises(KeyError):
+        parse_workload("no_such_workload")
+
+
+def test_unknown_regime_raises():
+    with pytest.raises(KeyError):
+        make_trace(make_spec("not_a_regime"))
+
+
+def test_typoed_param_raises():
+    """A mistyped regime knob must fail loudly, not silently serve the
+    default (``n_phase`` vs ``n_phases``)."""
+    with pytest.raises(KeyError, match="n_phase"):
+        make_trace(make_spec("diurnal", n_phase=6, n_accesses=100))
+    with pytest.raises(KeyError, match="zipf"):
+        make_trace(parse_workload("churn:zipfa=1.3"))
+
+
+def test_parse_workload_replay_defaults_to_whole_file(tmp_path):
+    """CLI replay specs default to the whole file, not the spec-default
+    access count; an explicit n_accesses still truncates."""
+    tr = generate_trace(TraceGenConfig(n_tables=2, rows_per_table=40,
+                                       n_accesses=300, seed=2))
+    path = tmp_path / "t.npz"
+    save_trace(tr, path)
+    spec = parse_workload(f"replay:path={path}")
+    assert spec.n_accesses == 0
+    assert len(make_trace(spec)) == 300
+    spec = parse_workload(f"replay:path={path},n_accesses=100")
+    assert len(make_trace(spec)) == 100
+
+
+def test_query_batches_from_workload():
+    """DLRM query streams can be derived from any scenario regime."""
+    from repro.data.dlrm_data import DLRMDataConfig, query_batches
+
+    cfg = DLRMDataConfig(n_tables=2, rows_per_table=64, multi_hot=2,
+                         batch=4, seed=3)
+    batches = list(query_batches(cfg, workload=scenario("zipf_hot"),
+                                 n_batches=3))
+    assert len(batches) == 3
+    for b in batches:
+        assert b["sparse"].shape == (4, 2, 2)
+        assert b["sparse"].min() >= 0 and b["sparse"].max() < 64
+    again = list(query_batches(cfg, workload=scenario("zipf_hot"),
+                               n_batches=3))
+    assert all(np.array_equal(a["sparse"], b["sparse"])
+               for a, b in zip(batches, again))
+
+
+def test_frequency_outputs_edge_cases():
+    """The frequency-heuristic model must handle degenerate traces: a
+    trace shorter than one chunk window yields zero chunks (no ragged
+    broadcast), and ``profile_upto=0`` means an *empty* profile (a model
+    that has seen nothing), not the whole trace."""
+    from repro.core.recmg import frequency_outputs
+
+    tiny = make_trace(make_spec("stationary", n_tables=2,
+                                rows_per_table=16, n_accesses=10))
+    out = frequency_outputs(tiny, 4)
+    assert len(out.chunk_starts) == 0
+    assert out.caching_bits.shape == (0, 15)
+
+    tr = make_trace(make_spec("stationary", n_tables=2, rows_per_table=16,
+                              n_accesses=200))
+    blind = frequency_outputs(tr, 4, profile_upto=0)
+    assert not blind.caching_bits.any()
+    assert blind.prefetch_ids.shape[1] == 0
+    full = frequency_outputs(tr, 4)
+    assert full.caching_bits.any()
+    assert (full.prefetch_ids.shape == (len(full.chunk_starts), 5)
+            and len(full.chunk_starts) > 0)
+
+
+def test_spec_with_override_and_hashability():
+    spec = scenario("zipf_mid", seed=1)
+    other = spec.with_(zipf_a=1.3, n_accesses=100)
+    assert other.param("zipf_a") == pytest.approx(1.3)
+    assert other.n_accesses == 100 and other.seed == 1
+    assert spec.param("zipf_a") == pytest.approx(1.05)  # original untouched
+    assert hash(spec) != hash(other)
+    assert spec == scenario("zipf_mid", seed=1)
