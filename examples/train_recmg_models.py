@@ -1,13 +1,15 @@
 """The paper's §V/VI-A workflow in isolation: generate an access trace,
-derive Belady/optgen ground truth, train the caching + prefetch models,
-and report the paper's quality metrics (accuracy, correctness, coverage)
-against the rule-based baselines.
+train the caching + prefetch duo through the serving runtime's single
+entry point (:meth:`LearnedRecMGModel.train_from_trace` — Belady ground
+truth, window featurization, both training loops, candidate pool), and
+report the paper's quality metrics (accuracy, correctness, coverage) on
+a held-out trace suffix against the rule-based baselines.  Evaluation
+inference runs the same jitted shape-bucketed path serving uses.
 
     PYTHONPATH=src python examples/train_recmg_models.py [--accesses 200000]
 """
 import argparse
 import sys
-from collections import Counter
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -22,14 +24,12 @@ def main():
     args = ap.parse_args()
 
     from repro.core.belady import belady_labels
-    from repro.core.caching_model import (CachingModelConfig,
-                                          evaluate_caching_model,
-                                          train_caching_model)
-    from repro.core.features import make_windows, split_train_eval
+    from repro.core.caching_model import evaluate_caching_model
+    from repro.core.features import make_windows
     from repro.core.lstm import n_params
-    from repro.core.prefetch_model import (
-        PrefetchData, PrefetchModelConfig, decode_to_ids, make_prefetch_data,
-        predict_sequences, sequence_metrics, train_prefetch_model)
+    from repro.core.model_runtime import (LearnedModelConfig,
+                                          LearnedRecMGModel)
+    from repro.core.prefetch_model import make_prefetch_data, sequence_metrics
     from repro.core.prefetchers import make_prefetcher, prediction_metrics
     from repro.core.trace import TraceGenConfig, generate_trace
 
@@ -37,35 +37,27 @@ def main():
                                        n_accesses=args.accesses,
                                        drift_every=10**9))
     cap = int(0.2 * tr.unique_count())
-    labels, opt_hits, miss = belady_labels(tr.global_id, cap)
+    _, opt_hits, _ = belady_labels(tr.global_id, cap)
     print(f"trace: {len(tr)} accesses, OPT hit rate {opt_hits.mean():.3f}")
 
-    # ---- caching model ----
-    mcfg = CachingModelConfig(n_tables=tr.n_tables)
-    data = make_windows(tr, labels=labels)
-    trd, evd = split_train_eval(data)
-    cparams, _ = train_caching_model(trd, mcfg, epochs=args.epochs,
-                                     batch_size=512, log=print)
+    # Train on the first 80%, evaluate on the held-out suffix.
+    split = int(0.8 * len(tr))
+    lcfg = LearnedModelConfig(hidden=40, caching_epochs=args.epochs,
+                              prefetch_epochs=args.epochs, batch_size=512,
+                              lr=3e-3, train_stride=10, n_candidates=2000)
+    model = LearnedRecMGModel.train_from_trace(tr, cap, lcfg,
+                                               profile_upto=split, log=print)
 
-    print(f"caching model: {n_params(cparams)} params (paper ~37K); "
-          f"accuracy {evaluate_caching_model(cparams, evd):.1%} (paper ~83%)")
+    ev = tr.slice(split, len(tr))
+    ev_labels, _, _ = belady_labels(ev.global_id, cap)
+    evd = make_windows(ev, in_len=lcfg.in_len, labels=ev_labels)
+    acc = evaluate_caching_model(model.cparams, evd)
+    print(f"caching model: {n_params(model.cparams)} params (paper ~37K); "
+          f"held-out accuracy {acc:.1%} (paper ~83%)")
 
-    # ---- prefetch model ----
-    pcfg = PrefetchModelConfig(n_tables=tr.n_tables)
-    pdata = make_prefetch_data(tr, stride=10)
-    n_ev = len(pdata) // 5
-    ptr = PrefetchData(pdata.base.batch(np.arange(len(pdata) - n_ev)),
-                       {k: v[:-n_ev] for k, v in pdata.w_feats.items()})
-    pev = PrefetchData(pdata.base.batch(np.arange(len(pdata) - n_ev, len(pdata))),
-                       {k: v[-n_ev:] for k, v in pdata.w_feats.items()})
-    pparams, _ = train_prefetch_model(ptr, pcfg, epochs=args.epochs,
-                                      batch_size=512, log=print)
-    print(f"prefetch model: {n_params(pparams)} params (paper ~74K)")
-
-    po = predict_sequences(pparams, pcfg, pev)
-    freq = Counter(tr.global_id[: int(len(tr) * 0.8)].tolist())
-    cand = np.array(sorted(k for k, _ in freq.most_common(2000)))
-    ids = decode_to_ids(pparams, pcfg, po, cand, tr)
+    pev = make_prefetch_data(ev, in_len=lcfg.in_len, stride=10)
+    print(f"prefetch model: {n_params(model.pparams)} params (paper ~74K)")
+    ids = model.decode_points(model.predict_points(pev.base))
     gt = np.round(pev.w_feats["wn"] * tr.n_vectors).astype(np.int64)
     m = sequence_metrics(ids, gt)
     print(f"prefetch correctness {m['correctness']:.1%} "

@@ -23,6 +23,14 @@ counter-derived, hence machine-independent):
   hit rate relative to pre-switch on the diurnal regime; a floor metric
   (adaptation must keep recovering after a hot-set rotation).
 
+One guards the learned serving path (bench ``learned``; counter-derived):
+
+* ``recmg_vs_voyager_on_demand_ratio`` — worst on-demand fetch ratio of
+  the learned dual-model RecMG vs the Voyager-class prefetch-only
+  baseline; a ceiling metric with an *absolute cap of 1.0* (the paper's
+  §VII-C claim is directional — RecMG must fetch less than Voyager — so
+  no tolerance may push the ceiling past parity).
+
 A metric regresses when it moves more than ``tolerance`` (default 30%)
 past its baseline in the bad direction.  Exit 1 on any regression —
 wired into the CI bench-smoke lane after the bench_e2e smoke.
@@ -70,13 +78,19 @@ def main(argv=None) -> int:
         if got < floor:
             failures.append(name)
 
-    def check_ceiling(key, name):
+    def check_ceiling(key, name, cap=None):
+        """Ceiling metric; ``cap`` is an optional *absolute* bound that
+        tightens the tolerance-derived ceiling (for ratios with a hard
+        semantic threshold — e.g. "learned must beat voyager" means the
+        ratio must stay < 1.0 no matter how generous the tolerance)."""
         want = base.get(name)
         got = results.get(key)
         if want is None or got is None:
             print(f"SKIP {name}: baseline={want} measured={got}")
             return
         ceil = want * (1.0 + tol)
+        if cap is not None:
+            ceil = min(ceil, cap)
         status = "OK" if got <= ceil else "REGRESSION"
         print(f"{status} {name}: measured {got:.3f} vs ceiling {ceil:.3f} "
               f"(baseline {want}, tolerance {tol:.0%})")
@@ -89,6 +103,8 @@ def main(argv=None) -> int:
     check_ceiling(("scenario", "recmg_lru_on_demand_ratio_worst"),
                   "recmg_lru_on_demand_ratio_worst")
     check_floor(("scenario", "adapt_recovery"), "adapt_recovery")
+    check_ceiling(("learned", "recmg_vs_voyager_on_demand_ratio"),
+                  "recmg_vs_voyager_on_demand_ratio", cap=1.0)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)

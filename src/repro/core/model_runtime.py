@@ -1,0 +1,419 @@
+"""Learned RecMG serving runtime: the trained dual models on the hot path.
+
+This closes ROADMAP item 1: the caching + prefetch models trained with the
+paper's differentiable losses (``bce_loss`` against Belady keep bits,
+``prefetch_loss`` — bidirectional Chamfer in the learned representation
+space) drive live serving instead of the frequency-heuristic stand-in.
+
+Three pieces:
+
+* :class:`LearnedRecMGModel` — owns both trained models and the candidate
+  pool.  ``train_from_trace`` is the compact entry point (same internals as
+  ``examples/train_recmg_models.py``: Belady ground truth on a trace
+  prefix, window featurization, both training loops).  Inference runs
+  through jitted **shape-bucketed** batched calls: batches are padded to
+  the next power of two so XLA compiles one kernel per bucket instead of
+  one per ragged length.  Padding is row-wise invariant for both models
+  (the vmapped forward has no cross-row ops), so within a bucket the
+  padded rows are bit-invisible; across buckets XLA's per-shape
+  compilation drifts the raw floats at rounding level (~1e-7) but the
+  serving-visible decisions — keep bits and decoded prefetch ids — are
+  identical to per-window calls.  Both halves of that contract are
+  pinned by ``tests/test_model_runtime.py``.
+* :class:`LearnedController` — the adaptation loop.  Wraps the PR-5
+  :class:`~repro.runtime.drift.AdaptiveController` (same ``BatchHook``
+  signature, so both serving paths wire it unchanged); on every drift
+  refresh it additionally fine-tunes the caching model on the live access
+  window (bounded jitted steps, persistent optimizer state), refreshes the
+  prefetch candidate pool from the same window, and recomputes the model
+  outputs for the rest of the trace.  Everything is seeded and clock-free,
+  so adaptive serving stays deterministic under ``VirtualClock``.
+* :func:`voyager_outputs` — the Voyager-class ML-prefetcher baseline as a
+  serving arm (LRU store + top-``out_len`` predicted prefetches per chunk),
+  the comparator for the paper's headline 1.5x on-demand reduction
+  (``recmg_vs_voyager_on_demand_ratio`` in ``benchmarks/bench_e2e.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.belady import belady_labels
+from repro.core.cache_sim import top_ids_by_count
+from repro.core.caching_model import (CachingModelConfig,
+                                      caching_logits_batch,
+                                      train_caching_model)
+from repro.core.caching_model import _train_step as _caching_train_step
+from repro.core.features import WindowData, make_windows
+from repro.core.prefetch_model import (PrefetchModelConfig, _nn_decode,
+                                       candidate_reps, make_prefetch_data,
+                                       prefetch_predict_batch,
+                                       train_prefetch_model)
+from repro.core.recmg import RecMGOutputs
+from repro.core.trace import Trace
+from repro.optim.adamw import OptConfig, init_opt
+from repro.runtime.drift import AdaptiveController, DriftConfig
+
+_EMPTY = np.empty(0, np.int64)
+
+
+@dataclass(frozen=True)
+class LearnedModelConfig:
+    """Training + inference + online-finetune knobs for the learned policy.
+
+    The defaults are tuned for the scenario-matrix scale (a few thousand
+    vectors, ~8K accesses): small hidden size, many epochs over densely
+    strided windows, candidate pool = the buffer capacity's hottest ids.
+    At this setting the learned policy beats the frequency heuristic on
+    on-demand fetches on every paper-target scenario (pinned by
+    ``tests/test_scenario_matrix.py``)."""
+
+    hidden: int = 32
+    in_len: int = 15
+    out_len: int = 5
+    caching_epochs: int = 30
+    prefetch_epochs: int = 15
+    batch_size: int = 128
+    lr: float = 1e-2
+    train_stride: int = 2     # window stride over the training prefix
+    seed: int = 0
+    n_candidates: int = 0     # prefetch candidate pool size; 0 -> capacity
+    infer_batch: int = 4096   # largest inference bucket
+    # Online fine-tune (per drift refresh): bounded, seeded, jitted.
+    finetune_steps: int = 8
+    finetune_batch: int = 64
+    finetune_lr: float = 2e-3
+    finetune_stride: int = 4
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n (the shape bucket a batch of n rows pads to)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def _pad_rows(a: np.ndarray, m: int) -> np.ndarray:
+    """Pad axis 0 to m rows by repeating the last row (values are dropped
+    after inference; repetition keeps every dtype/embedding index valid)."""
+    if len(a) == m:
+        return a
+    return np.concatenate([a, np.repeat(a[-1:], m - len(a), axis=0)])
+
+
+@jax.jit
+def _caching_logits_jit(params, xt, xr1, xr2, xn, xf, xrc):
+    return caching_logits_batch(params, xt, xr1, xr2, xn, xf, xrc)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _prefetch_points_jit(params, cfg, xt, xr1, xr2, xn, xf, xrc):
+    return prefetch_predict_batch(params, cfg, xt, xr1, xr2, xn, xf, xrc)
+
+
+class LearnedRecMGModel:
+    """The trained caching + prefetch models behind one serving interface.
+
+    ``predict_bits`` / ``predict_points`` / ``decode_points`` run jitted
+    shape-bucketed batched inference; ``outputs_for`` packages a whole
+    trace's chunk grid into :class:`RecMGOutputs` (the same grid
+    ``frequency_outputs`` uses, so the serving loops are interchangeable);
+    ``finetune`` takes one bounded online training pass on a live access
+    window (the drift-adaptation hook)."""
+
+    def __init__(self, cfg: LearnedModelConfig, mcfg: CachingModelConfig,
+                 pcfg: PrefetchModelConfig, cparams, pparams,
+                 cand_ids: np.ndarray, capacity: int, geom: Trace,
+                 caching_losses=None, prefetch_losses=None):
+        self.cfg = cfg
+        self.mcfg = mcfg
+        self.pcfg = pcfg
+        self.cparams = cparams
+        self.pparams = pparams
+        self.cand_ids = np.asarray(cand_ids, np.int64)
+        self.capacity = int(capacity)
+        # Table geometry reference (table_offsets / rows_per_table /
+        # n_vectors) for candidate featurization and window re-derivation.
+        self.geom = geom
+        self.caching_losses = list(caching_losses or [])
+        self.prefetch_losses = list(prefetch_losses or [])
+        # ---- online-finetune state + telemetry ----
+        self._ft_opt = None
+        self._ft_opt_cfg = None
+        self.finetunes = 0
+        self.finetune_steps_run = 0
+
+    # ------------------------------------------------------------------
+    # Training
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def train_from_trace(cls, trace: Trace, capacity: int,
+                         cfg: Optional[LearnedModelConfig] = None, *,
+                         profile_upto: Optional[int] = None,
+                         log=None) -> "LearnedRecMGModel":
+        """Train both models on a trace prefix (the paper's §VI-A offline
+        workflow in one call): Belady keep bits on the prefix label the
+        caching model, the prefix's future windows supervise the prefetch
+        model, and the prefix's ``capacity`` hottest ids seed the prefetch
+        candidate pool.  ``profile_upto`` freezes training on a prefix —
+        the drift experiments' phase-1-only model."""
+        cfg = cfg or LearnedModelConfig()
+        prefix = (trace if profile_upto is None
+                  else trace.slice(0, int(profile_upto)))
+        capacity = max(1, int(capacity))
+        labels, _, _ = belady_labels(prefix.global_id, capacity)
+        mcfg = CachingModelConfig(n_tables=trace.n_tables, hidden=cfg.hidden,
+                                  in_len=cfg.in_len)
+        data = make_windows(prefix, in_len=cfg.in_len, labels=labels,
+                            stride=cfg.train_stride)
+        cparams, closs = train_caching_model(
+            data, mcfg, epochs=cfg.caching_epochs, batch_size=cfg.batch_size,
+            lr=cfg.lr, seed=cfg.seed, log=log)
+        pcfg = PrefetchModelConfig(n_tables=trace.n_tables, hidden=cfg.hidden,
+                                   in_len=cfg.in_len, out_len=cfg.out_len)
+        pdata = make_prefetch_data(prefix, in_len=cfg.in_len,
+                                   stride=cfg.train_stride)
+        pparams, ploss = train_prefetch_model(
+            pdata, pcfg, epochs=cfg.prefetch_epochs,
+            batch_size=cfg.batch_size, lr=cfg.lr, seed=cfg.seed, log=log)
+        n_cand = cfg.n_candidates or capacity
+        cand = np.sort(top_ids_by_count(prefix.global_id, max(1, n_cand)))
+        return cls(cfg, mcfg, pcfg, cparams, pparams, cand, capacity, trace,
+                   closs, ploss)
+
+    # ------------------------------------------------------------------
+    # Jitted shape-bucketed inference
+    # ------------------------------------------------------------------
+
+    def _slices(self, n: int):
+        for i in range(0, n, self.cfg.infer_batch):
+            yield i, min(i + self.cfg.infer_batch, n)
+
+    @staticmethod
+    def _feed(b: WindowData, m: int):
+        return [jnp.asarray(_pad_rows(np.asarray(a), m)) for a in
+                (b.x_table, b.x_row1, b.x_row2, b.x_norm, b.x_freq, b.x_rec)]
+
+    def predict_bits(self, data: WindowData) -> np.ndarray:
+        """Keep-bits for every window: jitted, bucketed.  (N, in_len) bool."""
+        n = len(data)
+        if n == 0:
+            return np.zeros((0, self.mcfg.in_len), bool)
+        outs = []
+        for lo, hi in self._slices(n):
+            b = data.batch(np.arange(lo, hi))
+            logits = _caching_logits_jit(
+                self.cparams, *self._feed(b, _bucket(hi - lo)))
+            outs.append(np.asarray(logits)[: hi - lo] > 0)
+        return np.concatenate(outs, axis=0)
+
+    def predict_points(self, data: WindowData) -> np.ndarray:
+        """Predicted PO representation points, jitted + bucketed.
+        (N, out_len, rep_dim) f32."""
+        n = len(data)
+        if n == 0:
+            return np.zeros((0, self.pcfg.out_len, self.pcfg.rep_dim),
+                            np.float32)
+        outs = []
+        for lo, hi in self._slices(n):
+            b = data.batch(np.arange(lo, hi))
+            po = _prefetch_points_jit(
+                self.pparams, self.pcfg, *self._feed(b, _bucket(hi - lo)))
+            outs.append(np.asarray(po)[: hi - lo])
+        return np.concatenate(outs, axis=0)
+
+    def decode_points(self, points: np.ndarray) -> np.ndarray:
+        """Snap predicted points to candidate-pool ids.  (N, P) int64."""
+        if points.size == 0:
+            return np.zeros(points.shape[:-1], np.int64)
+        cand = candidate_reps(self.pparams, self.pcfg, self.cand_ids,
+                              self.geom)
+        flat = np.asarray(points, np.float32).reshape(-1, points.shape[-1])
+        outs = []
+        for i in range(0, len(flat), self.cfg.infer_batch):
+            seg = flat[i: i + self.cfg.infer_batch]
+            idx = _nn_decode(jnp.asarray(_pad_rows(seg, _bucket(len(seg)))),
+                             cand)
+            outs.append(np.asarray(idx)[: len(seg)])
+        nn = np.concatenate(outs)
+        return self.cand_ids[nn].reshape(points.shape[:-1])
+
+    def outputs_for(self, trace: Trace) -> RecMGOutputs:
+        """Model outputs on the serving chunk grid (stride = in_len), the
+        same grid ``precompute_outputs`` / ``frequency_outputs`` emit."""
+        cfg = self.cfg
+        data = make_windows(trace, in_len=cfg.in_len,
+                            out_window=cfg.out_len, stride=cfg.in_len)
+        starts = np.arange(cfg.in_len, len(trace) - cfg.out_len - 1,
+                           cfg.in_len)[: len(data)]
+        bits = self.predict_bits(data)
+        ids = self.decode_points(self.predict_points(data))
+        return RecMGOutputs(starts, bits, ids)
+
+    # ------------------------------------------------------------------
+    # Online adaptation
+    # ------------------------------------------------------------------
+
+    def refresh_candidates(self, ids: np.ndarray) -> None:
+        """Re-derive the prefetch candidate pool from a live window."""
+        ids = np.asarray(ids, np.int64).ravel()
+        if ids.size:
+            self.cand_ids = np.sort(
+                top_ids_by_count(ids, max(1, len(self.cand_ids))))
+
+    def finetune(self, recent_ids: np.ndarray) -> int:
+        """One bounded online fine-tune pass of the caching model on the
+        most recent accesses (<= ``finetune_steps`` jitted steps of
+        ``finetune_batch`` windows at ``finetune_lr``; Adam state persists
+        across calls).  Belady labels are re-derived on the window — the
+        same supervision as offline training, just on live data.  Also
+        refreshes the prefetch candidate pool.  Returns steps taken."""
+        cfg = self.cfg
+        recent = np.asarray(recent_ids, np.int64).ravel()
+        self.finetunes += 1
+        self.refresh_candidates(recent)
+        if recent.size <= cfg.in_len * 2:
+            return 0
+        offs = self.geom.table_offsets
+        t = np.searchsorted(offs, recent, side="right") - 1
+        row = recent - offs[t]
+        wtrace = Trace(t.astype(np.int32), row.astype(np.int64),
+                       self.geom.rows_per_table)
+        wlabels, _, _ = belady_labels(recent, self.capacity)
+        wdata = make_windows(wtrace, in_len=cfg.in_len, labels=wlabels,
+                             stride=cfg.finetune_stride)
+        if len(wdata) < cfg.finetune_batch:
+            return 0
+        if self._ft_opt is None:
+            self._ft_opt_cfg = OptConfig(lr=cfg.finetune_lr,
+                                         weight_decay=0.0, warmup_steps=1,
+                                         total_steps=10 ** 6)
+            self._ft_opt = init_opt(self._ft_opt_cfg, self.cparams)
+        rng = np.random.default_rng(1000 + cfg.seed + self.finetunes)
+        idx = rng.permutation(len(wdata))[: cfg.finetune_steps
+                                          * cfg.finetune_batch]
+        steps = 0
+        for i in range(0, len(idx) - cfg.finetune_batch + 1,
+                       cfg.finetune_batch):
+            b = wdata.batch(idx[i: i + cfg.finetune_batch])
+            batch = {
+                "xt": jnp.asarray(b.x_table), "xr1": jnp.asarray(b.x_row1),
+                "xr2": jnp.asarray(b.x_row2), "xn": jnp.asarray(b.x_norm),
+                "xf": jnp.asarray(b.x_freq), "xrc": jnp.asarray(b.x_rec),
+                "y": jnp.asarray(b.y_keep),
+            }
+            self.cparams, self._ft_opt, _ = _caching_train_step(
+                self.cparams, self._ft_opt, batch, self._ft_opt_cfg)
+            steps += 1
+        self.finetune_steps_run += steps
+        return steps
+
+    def telemetry(self) -> dict:
+        return {
+            "caching_loss": (round(float(np.mean(self.caching_losses[-20:])),
+                                   4) if self.caching_losses else None),
+            "prefetch_loss": (round(float(np.mean(self.prefetch_losses[-20:])),
+                                    5) if self.prefetch_losses else None),
+            "n_candidates": int(len(self.cand_ids)),
+            "finetunes": self.finetunes,
+            "finetune_steps": self.finetune_steps_run,
+        }
+
+
+@dataclass
+class OutputsRef:
+    """Mutable holder for the live :class:`RecMGOutputs` — the serving
+    loops read through it so an online refresh swaps the outputs without
+    re-wiring the loop (the chunk grid is identical, so the loop's chunk
+    pointer stays valid)."""
+
+    outputs: Optional[RecMGOutputs] = field(default=None)
+
+
+class LearnedController:
+    """Drift adaptation with model fine-tune: the PR-5 heuristic refresh
+    (hot-pool rebuild + per-chunk re-rank + bounded prefetch) *plus*, on
+    every pool refresh, a bounded fine-tune of the caching model on the
+    live window and a full output recompute.  Exposes the same
+    ``on_batch`` hook (:data:`~repro.runtime.drift.BatchHook`), so
+    ``serve_trace``, the pipelined runtime and the scenario harness wire
+    it exactly like :class:`AdaptiveController`."""
+
+    def __init__(self, store, capacity: int, model: LearnedRecMGModel,
+                 outputs_ref: OutputsRef, trace: Trace,
+                 cfg: Optional[DriftConfig] = None):
+        self.inner = AdaptiveController(store, capacity, cfg)
+        self.model = model
+        self.outputs_ref = outputs_ref
+        self.trace = trace
+        self._refreshes_seen = 0
+
+    def on_batch(self, ids: np.ndarray, hits: int,
+                 batch_index: int = 0) -> List[Tuple]:
+        items = self.inner.on_batch(ids, hits, batch_index)
+        if self.inner.refreshes > self._refreshes_seen:
+            self._refreshes_seen = self.inner.refreshes
+            self.model.finetune(self.inner.recent_ids())
+            self.outputs_ref.outputs = self.model.outputs_for(self.trace)
+        return items
+
+    def as_dict(self) -> dict:
+        d = self.inner.as_dict()
+        d.update(finetunes=self.model.finetunes,
+                 finetune_steps=self.model.finetune_steps_run)
+        return d
+
+
+def voyager_outputs(trace: Trace, capacity: int, in_len: int = 15,
+                    out_len: int = 5, *,
+                    profile_upto: Optional[int] = None, epochs: int = 8,
+                    batch_size: int = 128, lr: float = 5e-3,
+                    train_stride: int = 2, page_size: int = 64,
+                    hidden: int = 32, seed: int = 0,
+                    n_candidates: int = 0) -> RecMGOutputs:
+    """Voyager-class ML-prefetcher serving arm (paper §VII-B baseline).
+
+    Trains the hierarchical page/offset classifier on the trace prefix,
+    then emits per-chunk top-``out_len`` prefetch ids by scoring the
+    candidate pool with ``page_logit[page(c)] + offset_logit[offset(c)]``
+    (the decomposed softmax read out over real ids).  No caching bits —
+    Voyager only prefetches, so the serving arm is an LRU store + this
+    prefetch stream (the LRU+PF mode of ``apply_model_outputs``)."""
+    from repro.core.voyager import (VoyagerConfig, train_voyager,
+                                    voyager_logits_batch)
+
+    prefix = (trace if profile_upto is None
+              else trace.slice(0, int(profile_upto)))
+    vcfg = VoyagerConfig(n_vectors=trace.n_vectors, page_size=page_size,
+                         hidden=hidden, in_len=in_len)
+    data = make_windows(prefix, in_len=in_len, out_window=1,
+                        stride=train_stride)
+    vparams, _ = train_voyager(data, vcfg, trace.n_tables, epochs=epochs,
+                               batch_size=batch_size, lr=lr, seed=seed)
+
+    sdata = make_windows(trace, in_len=in_len, out_window=out_len,
+                         stride=in_len)
+    starts = np.arange(in_len, len(trace) - out_len - 1,
+                       in_len)[: len(sdata)]
+    cand = np.sort(top_ids_by_count(
+        prefix.global_id, max(1, n_candidates or int(capacity))))
+    pages = jnp.asarray((cand // page_size).astype(np.int32))
+    offs = jnp.asarray((cand % page_size).astype(np.int32))
+    k = min(out_len, len(cand))
+    ids = np.zeros((len(sdata), out_len), np.int64)
+    for i in range(0, len(sdata), 4096):
+        b = sdata.batch(np.arange(i, min(i + 4096, len(sdata))))
+        pl, ol = voyager_logits_batch(
+            vparams, vcfg, jnp.asarray(b.x_table), jnp.asarray(b.x_row1),
+            jnp.asarray(b.x_row2), jnp.asarray(b.x_norm))
+        score = pl[:, pages] + ol[:, offs]  # (B, C) over the candidate pool
+        top = np.asarray(jax.lax.top_k(score, k)[1])
+        got = cand[top]
+        if k < out_len:  # tiny pools: repeat to fill the grid
+            got = np.pad(got, ((0, 0), (0, out_len - k)), mode="edge")
+        ids[i: i + len(got)] = got
+    return RecMGOutputs(starts, None, ids)

@@ -69,7 +69,7 @@ def precompute_outputs(trace: Trace, caching=None, prefetch=None,
 
 
 def frequency_outputs(trace: Trace, capacity: int, in_len: int = 15,
-                      out_len: int = 5,
+                      out_len: int = 5, *,
                       profile_upto: Optional[int] = None) -> RecMGOutputs:
     """Frequency-heuristic RecMG outputs — a stand-in for the trained
     models that needs no training and is fully deterministic.
@@ -87,7 +87,11 @@ def frequency_outputs(trace: Trace, capacity: int, in_len: int = 15,
     (``profile_upto``; 0 means an *empty* profile, i.e. a model that has
     seen nothing) and the outputs keep ranking/prefetching stale rows
     after the regime switches, reproducing the decay ``--adapt`` must
-    recover from."""
+    recover from.
+
+    ``profile_upto`` is keyword-only: a positional mixup with ``out_len``
+    would silently profile past the freeze point (i.e. train on
+    post-switch data) instead of failing loudly."""
     from repro.core.cache_sim import isin_sorted, top_ids_by_count
 
     keys = trace.global_id.astype(np.int64)

@@ -36,7 +36,7 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
                 async_prefetch: bool = False, pipeline_depth: int = 2,
                 scheduler: str = "inline", interarrival_us: float = 0.0,
                 compute_us: Optional[float] = None, adapt: bool = False,
-                adapt_cfg=None, log=None) -> Dict:
+                adapt_cfg=None, model=None, log=None) -> Dict:
     """Replay a trace as DLRM inference batches through the tiered store.
 
     ``multi_table=True`` serves through the per-table facade (one batched
@@ -67,7 +67,14 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     drift trigger the caching/prefetch model *features* are refreshed
     online (hot-pool rebuild + per-chunk re-rank + prefetch of the
     newly-hot rows), staged through the normal model-output path.  The
-    result dict gains a ``"drift"`` telemetry key."""
+    result dict gains a ``"drift"`` telemetry key.
+
+    ``model`` optionally passes the live
+    :class:`~repro.core.model_runtime.LearnedRecMGModel` behind
+    ``outputs``; with ``adapt=True`` the drift controller then also
+    fine-tunes the model online on every refresh and swaps in recomputed
+    outputs (:class:`~repro.core.model_runtime.LearnedController`) — on
+    both the synchronous and the pipelined (``VirtualClock``) path."""
     T, P = cfg.n_tables, cfg.multi_hot
     per_batch = batch_queries * T * P
     host_rows = int(trace.rows_per_table.sum())
@@ -104,6 +111,10 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     chunk_state = {"ptr": 0}
     compute = {"s": 0.0}
 
+    from repro.core.model_runtime import OutputsRef
+
+    oref = OutputsRef(outputs)
+
     controller = None
     if adapt:
         from repro.runtime.drift import AdaptiveController, DriftConfig
@@ -111,29 +122,39 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         if adapt_cfg is None:
             adapt_cfg = DriftConfig(window=max(1024, 4 * per_batch),
                                     hot_k=min(capacity, 256))
-        controller = AdaptiveController(store, capacity, adapt_cfg)
+        if model is not None:
+            from repro.core.model_runtime import LearnedController
+
+            controller = LearnedController(store, capacity, model, oref,
+                                           trace, adapt_cfg)
+        else:
+            controller = AdaptiveController(store, capacity, adapt_cfg)
 
     def staged_for_batch(b):
         """Model outputs to stage after batch ``b``: caching priorities for
         every chunk the batch covered, but prefetches only from the most
         recent one — the paper issues ONE prefetch set per inference batch
-        (Fig. 6); flooding every chunk's PO would churn the buffer."""
-        if outputs is None:
+        (Fig. 6); flooding every chunk's PO would churn the buffer.  Reads
+        through ``oref`` so an online output refresh (LearnedController)
+        takes effect at the next batch; the chunk grid is identical, so
+        the chunk pointer stays valid."""
+        out = oref.outputs
+        if out is None:
             return []
         items, last_pf = [], None
         hi = (b + 1) * per_batch
         empty = np.empty(0, np.int64)
         ptr = chunk_state["ptr"]
-        while (ptr < len(outputs.chunk_starts)
-               and outputs.chunk_starts[ptr] < hi):
-            s = int(outputs.chunk_starts[ptr])
+        while (ptr < len(out.chunk_starts)
+               and out.chunk_starts[ptr] < hi):
+            s = int(out.chunk_starts[ptr])
             trunk = gid[max(0, s - 15): s]
-            bits = (outputs.caching_bits[ptr]
-                    if outputs.caching_bits is not None
+            bits = (out.caching_bits[ptr]
+                    if out.caching_bits is not None
                     else np.zeros(len(trunk)))
             items.append((trunk, bits, empty))
-            if outputs.prefetch_ids is not None:
-                last_pf = outputs.prefetch_ids[ptr]
+            if out.prefetch_ids is not None:
+                last_pf = out.prefetch_ids[ptr]
             ptr += 1
         chunk_state["ptr"] = ptr
         if last_pf is not None:
@@ -272,6 +293,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="recmg",
                     choices=["lru", "recmg", "recmg-oracle"])
+    ap.add_argument("--model", default="learned",
+                    choices=["learned", "frequency", "voyager"],
+                    help="where the recmg model outputs come from: the "
+                         "trained dual models (learned — jitted bucketed "
+                         "inference, online fine-tune under --adapt), the "
+                         "deterministic frequency heuristic, or the "
+                         "Voyager-class ML prefetcher baseline (prefetch "
+                         "stream on an LRU store)")
     ap.add_argument("--batches", type=int, default=40)
     ap.add_argument("--batch-queries", type=int, default=32)
     ap.add_argument("--capacity-frac", type=float, default=0.2)
@@ -332,38 +361,47 @@ def main(argv=None):
     capacity = int(args.capacity_frac * trace.unique_count())
 
     outputs = None
+    model_rt = None
+    pol = args.policy
     if args.policy.startswith("recmg"):
-        from repro.core.belady import belady_labels
-        from repro.core.caching_model import (CachingModelConfig,
-                                              train_caching_model)
-        from repro.core.features import make_windows
-        from repro.core.prefetch_model import (PrefetchModelConfig,
-                                               make_prefetch_data,
-                                               train_prefetch_model)
-
-        labels, _, _ = belady_labels(trace.global_id, capacity)
         if args.policy == "recmg-oracle":
             outputs = precompute_outputs(trace)
             outputs = RecMGOutputs(outputs.chunk_starts, None, None)
-        else:
-            mcfg = CachingModelConfig(n_tables=cfg.n_tables)
-            data = make_windows(trace, labels=labels)
-            cparams, _ = train_caching_model(
-                data, mcfg, epochs=args.train_epochs, log=print)
-            pcfg = PrefetchModelConfig(n_tables=cfg.n_tables)
-            pdata = make_prefetch_data(trace)
-            pparams, _ = train_prefetch_model(
-                pdata, pcfg, epochs=args.train_epochs, log=print)
-            outputs = precompute_outputs(
-                trace, caching=(cparams, mcfg), prefetch=(pparams, pcfg))
+        elif args.model == "frequency":
+            from repro.core.recmg import frequency_outputs
 
-    res = serve_trace(cfg, params, trace, capacity, args.policy, outputs,
+            outputs = frequency_outputs(trace, capacity)
+        elif args.model == "voyager":
+            from repro.core.model_runtime import voyager_outputs
+
+            # Prefetch-only baseline: LRU residency + Voyager's stream.
+            outputs = voyager_outputs(trace, capacity,
+                                      epochs=args.train_epochs)
+            pol = "lru"
+        else:
+            from repro.core.model_runtime import (LearnedModelConfig,
+                                                  LearnedRecMGModel)
+
+            # CLI-scale knobs (the LearnedModelConfig defaults are tuned
+            # for the small scenario-matrix scale): the seed launcher's
+            # model size, epochs from --train-epochs, sparser windows and
+            # the wide deployment candidate pool.
+            lcfg = LearnedModelConfig(
+                hidden=40, caching_epochs=args.train_epochs,
+                prefetch_epochs=args.train_epochs, batch_size=256,
+                lr=3e-3, train_stride=5, n_candidates=5000)
+            model_rt = LearnedRecMGModel.train_from_trace(
+                trace, capacity, lcfg, log=print)
+            outputs = model_rt.outputs_for(trace)
+
+    res = serve_trace(cfg, params, trace, capacity, pol, outputs,
                       batch_queries=args.batch_queries,
                       multi_table=args.multi_table,
                       shards=args.shards, placement=args.placement,
                       async_prefetch=args.async_prefetch,
                       pipeline_depth=args.pipeline_depth,
-                      scheduler=args.scheduler, adapt=args.adapt, log=print)
+                      scheduler=args.scheduler, adapt=args.adapt,
+                      model=model_rt, log=print)
     print({k: v for k, v in res.items()})
     return res
 

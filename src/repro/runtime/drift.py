@@ -210,6 +210,14 @@ class AdaptiveController:
             items.append(self._rerank_chunk(ids))
         return items
 
+    def recent_ids(self) -> np.ndarray:
+        """The controller's live access window (most recent ~``window``
+        accesses, oldest first) — the data an online fine-tune trains on
+        (:class:`~repro.core.model_runtime.LearnedController`)."""
+        if not self._recent:
+            return _EMPTY
+        return np.concatenate(self._recent)
+
     def _refresh_pool(self) -> List[Tuple]:
         from repro.core.cache_sim import top_ids_by_count
 

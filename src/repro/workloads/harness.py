@@ -7,10 +7,15 @@ tens of milliseconds, so the regression tests can afford
 ``regime x policy x shard-count`` and the bench can afford per-scenario
 rows.
 
-The recmg arm uses :func:`repro.core.recmg.frequency_outputs` (the
-deterministic frequency-heuristic stand-in for the trained models);
-``profile_frac < 1`` freezes that profile on a trace prefix — the
-frozen-model decay arm of the drift experiments.
+The recmg arm's outputs come from the ``model`` switch: ``"frequency"``
+(the deterministic frequency-heuristic stand-in, the default),
+``"learned"`` (the trained dual models —
+:class:`repro.core.model_runtime.LearnedRecMGModel` trained on the trace
+prefix, jitted bucketed inference, and with ``adapt=True`` the online
+fine-tune loop), or ``"voyager"`` (the ML-prefetcher baseline: LRU store
++ Voyager prefetch stream).  ``profile_frac < 1`` freezes the
+profile/training on a trace prefix — the frozen-model decay arm of the
+drift experiments.
 
 Counters returned here are exactly the store's ``TierStats`` (plus drift
 telemetry when ``adapt=True``), so golden files pin the same quantities
@@ -59,14 +64,25 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
                     adapt_cfg: Optional[DriftConfig] = None,
                     profile_frac: float = 1.0, emb_dim: int = 8,
                     capacity: Optional[int] = None,
-                    in_len: int = 15, out_len: int = 5) -> Dict:
+                    in_len: int = 15, out_len: int = 5,
+                    model: str = "frequency", model_cfg=None) -> Dict:
     """Serve one scenario end to end; returns the metrics dict.
 
-    ``policy`` is ``"lru"`` or ``"recmg"`` (recmg gets frequency-heuristic
-    model outputs profiled on the first ``profile_frac`` of the trace).
+    ``policy`` is ``"lru"`` or ``"recmg"``; ``model`` selects where the
+    recmg outputs come from (``"frequency"`` heuristic, ``"learned"``
+    trained dual models, or ``"voyager"`` — the prefetch-only baseline,
+    served on an LRU store) and ``model_cfg`` optionally overrides the
+    :class:`~repro.core.model_runtime.LearnedModelConfig`.  The profile /
+    training data is the first ``profile_frac`` of the trace.
     ``adapt=True`` attaches an :class:`AdaptiveController` whose refresh
-    items are staged through the same model-output path.
+    items are staged through the same model-output path; with
+    ``model="learned"`` the controller additionally fine-tunes the model
+    online on every drift refresh
+    (:class:`~repro.core.model_runtime.LearnedController`).
     """
+    if model not in ("frequency", "learned", "voyager"):
+        raise ValueError(f"unknown model {model!r} "
+                         "(frequency | learned | voyager)")
     trace = make_trace(spec)
     cap = int(capacity) if capacity else max(
         4, int(capacity_frac * trace.unique_count()))
@@ -75,19 +91,40 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
     store = build_store(host, trace.rows_per_table, cap, policy,
                         shards=shards, placement=placement,
                         warmup_batch=batch)
+    upto = int(profile_frac * len(trace)) if profile_frac < 1.0 else None
     outputs = None
-    if policy == "recmg":
-        upto = (int(profile_frac * len(trace))
-                if profile_frac < 1.0 else None)
-        outputs = frequency_outputs(trace, cap, in_len=in_len,
-                                    out_len=out_len, profile_upto=upto)
+    learned = None
+    if model == "voyager":
+        from repro.core.model_runtime import voyager_outputs
+
+        outputs = voyager_outputs(trace, cap, in_len=in_len,
+                                  out_len=out_len, profile_upto=upto)
+    elif policy == "recmg":
+        if model == "learned":
+            from repro.core.model_runtime import LearnedRecMGModel
+
+            learned = LearnedRecMGModel.train_from_trace(
+                trace, cap, model_cfg, profile_upto=upto)
+            outputs = learned.outputs_for(trace)
+        else:
+            outputs = frequency_outputs(trace, cap, in_len=in_len,
+                                        out_len=out_len, profile_upto=upto)
+    from repro.core.model_runtime import OutputsRef
+
+    oref = OutputsRef(outputs)
 
     controller = None
     if adapt:
         if adapt_cfg is None:
             adapt_cfg = DriftConfig(window=max(512, 4 * batch),
                                     hot_k=min(cap, 256))
-        controller = AdaptiveController(store, cap, adapt_cfg)
+        if learned is not None:
+            from repro.core.model_runtime import LearnedController
+
+            controller = LearnedController(store, cap, learned, oref,
+                                           trace, adapt_cfg)
+        else:
+            controller = AdaptiveController(store, cap, adapt_cfg)
 
     gid = trace.global_id
     chunk_ptr = 0
@@ -102,17 +139,24 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
         batch_hit_rates.append(hits / max(ids.size, 1))
         # Stage the chunks this batch covered — caching ranks for every
         # chunk, prefetches only from the most recent one (serve_trace's
-        # one-prefetch-set-per-batch rule, paper Fig. 6).
-        if outputs is not None:
+        # one-prefetch-set-per-batch rule, paper Fig. 6).  Outputs are
+        # read through ``oref`` so an online refresh (LearnedController)
+        # swaps them mid-run; the chunk grid is identical, so the chunk
+        # pointer stays valid.
+        if oref.outputs is not None:
+            out = oref.outputs
             hi = (b + 1) * batch
             last_pf = None
-            while (chunk_ptr < len(outputs.chunk_starts)
-                   and outputs.chunk_starts[chunk_ptr] < hi):
-                s = int(outputs.chunk_starts[chunk_ptr])
+            while (chunk_ptr < len(out.chunk_starts)
+                   and out.chunk_starts[chunk_ptr] < hi):
+                s = int(out.chunk_starts[chunk_ptr])
                 trunk = gid[max(0, s - in_len): s]
-                bits = outputs.caching_bits[chunk_ptr]
+                bits = (out.caching_bits[chunk_ptr]
+                        if out.caching_bits is not None
+                        else np.zeros(len(trunk)))
                 store.stage_model_outputs(trunk, bits, empty)
-                last_pf = outputs.prefetch_ids[chunk_ptr]
+                if out.prefetch_ids is not None:
+                    last_pf = out.prefetch_ids[chunk_ptr]
                 chunk_ptr += 1
             if last_pf is not None:
                 store.stage_model_outputs(empty, empty,
@@ -124,7 +168,7 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
 
     res = store.stats.as_dict()
     res.update(
-        regime=spec.regime, policy=policy, capacity=cap,
+        regime=spec.regime, policy=policy, model=model, capacity=cap,
         n_accesses=len(trace), shards=shards,
         p50_batch_ms=float(np.percentile(lat, 50) * 1e3) if lat else 0.0,
         p95_batch_ms=float(np.percentile(lat, 95) * 1e3) if lat else 0.0,
@@ -133,6 +177,8 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
     )
     if shards:
         res["shard"] = store.shard_telemetry()
+    if learned is not None:
+        res["learned"] = learned.telemetry()
     if controller is not None:
         res["drift"] = controller.as_dict()
     return res

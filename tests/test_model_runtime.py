@@ -1,0 +1,227 @@
+"""Serving-runtime contracts of the learned RecMG duo
+(:mod:`repro.core.model_runtime`):
+
+* **Padding is invisible** — a batch of n and a batch of m >= n windows
+  landing in the same shape bucket produce *bit-identical* outputs on
+  the shared rows (the edge-repeat padding rows and the vmapped
+  forwards' lack of cross-row ops make bucketing a pure compile-count
+  optimization).
+* **Buckets agree on decisions** — across *different* buckets XLA
+  compiles per shape and the raw floats drift at rounding level
+  (~1e-7), but the serving-visible outputs — thresholded keep bits and
+  nearest-candidate prefetch ids — must be identical to feeding each
+  window alone, for ragged batch sizes straddling every bucket boundary
+  (fuzzed via the hypothesis shim plus a deterministic boundary sweep).
+* **Batched ~ scalar** — the truly scalar (un-vmapped) forward agrees
+  with the batched path to float tolerance, and the thresholded keep
+  bits agree wherever the logit is not razor-thin.
+* **Grid compatibility** — ``outputs_for`` emits exactly the chunk grid
+  ``frequency_outputs`` emits, so every serving loop is interchangeable.
+* **Drift fine-tune acceptance** (slow) — on the diurnal switch, the
+  phase-1-trained model under :class:`LearnedController` recovers the
+  post-switch steady hit rate to within 10% of pre-switch, beats its own
+  frozen variant, matches-or-beats the PR-5 heuristic refresh, and
+  reproduces byte-identically.
+"""
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core.caching_model import caching_logits
+from repro.core.features import make_windows
+from repro.core.model_runtime import (LearnedModelConfig, LearnedRecMGModel,
+                                      _bucket)
+from repro.core.recmg import frequency_outputs
+from repro.core.trace import TraceGenConfig, generate_trace
+
+CAP = 48
+
+
+@lru_cache(maxsize=None)
+def _setup():
+    """One cheaply-trained model + its window set, shared by the whole
+    module (the equivalence contract does not care how converged the
+    weights are, only that inference reproduces)."""
+    trace = generate_trace(TraceGenConfig(
+        n_tables=3, rows_per_table=64, n_accesses=3000, seed=0,
+        drift_every=10**9))
+    cfg = LearnedModelConfig(hidden=16, caching_epochs=1, prefetch_epochs=1,
+                             train_stride=8)
+    model = LearnedRecMGModel.train_from_trace(trace, CAP, cfg)
+    data = make_windows(trace, in_len=cfg.in_len, out_window=cfg.out_len,
+                        stride=cfg.in_len)
+    return trace, model, data
+
+
+def _assert_batch_matches_per_window(idx: np.ndarray):
+    """Cross-bucket contract: decisions (bits, decoded ids) identical to
+    per-window calls; raw points within float rounding."""
+    _, model, data = _setup()
+    sub = data.batch(idx)
+    bits = model.predict_bits(sub)
+    pts = model.predict_points(sub)
+    ids = model.decode_points(pts)
+    for j, i in enumerate(idx):
+        one = data.batch(np.array([i]))
+        np.testing.assert_array_equal(bits[j], model.predict_bits(one)[0])
+        p1 = model.predict_points(one)
+        np.testing.assert_allclose(pts[j], p1[0], rtol=0, atol=2e-6)
+        np.testing.assert_array_equal(ids[j], model.decode_points(p1)[0])
+
+
+def test_bucket_helper():
+    assert [_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 4096)] == \
+        [1, 2, 4, 4, 8, 8, 16, 4096]
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33])
+def test_same_bucket_padding_bit_exact(n):
+    """A batch of n and the full bucket batch of _bucket(n) windows go
+    through the same compiled kernel — shared rows must be bit-identical
+    (points included), i.e. the padding rows are truly invisible."""
+    _, model, data = _setup()
+    m = _bucket(n)
+    assert len(data) >= m
+    small, fullb = data.batch(np.arange(n)), data.batch(np.arange(m))
+    np.testing.assert_array_equal(model.predict_bits(small),
+                                  model.predict_bits(fullb)[:n])
+    ps, pf = model.predict_points(small), model.predict_points(fullb)
+    np.testing.assert_array_equal(ps, pf[:n])  # bit-exact, not close
+    np.testing.assert_array_equal(model.decode_points(ps),
+                                  model.decode_points(pf)[:n])
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33])
+def test_bucketed_inference_matches_per_window_at_boundaries(n):
+    """Every bucket boundary (2^k - 1, 2^k, 2^k + 1): the bucketed batch
+    makes the same decisions as feeding each window alone."""
+    _, _, data = _setup()
+    assert len(data) >= 33
+    _assert_batch_matches_per_window(np.arange(n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 130))
+def test_bucketed_inference_matches_per_window_fuzz(n, off):
+    """Ragged (offset, size) sub-batches — arbitrary serving slices hit
+    arbitrary buckets and must all reproduce."""
+    _, _, data = _setup()
+    off = off % max(1, len(data) - 1)
+    n = min(n, len(data) - off)
+    _assert_batch_matches_per_window(np.arange(off, off + n))
+
+
+def test_batched_close_to_scalar_forward():
+    """The un-vmapped scalar forward is the semantic reference: batched
+    logits match it to float tolerance, and the *decisions* (sign of the
+    logit) match everywhere the logit is not within rounding of zero."""
+    _, model, data = _setup()
+    n = 24
+    bits = model.predict_bits(data.batch(np.arange(n)))
+    for i in range(n):
+        b = data.batch(np.array([i]))
+        logit = np.asarray(caching_logits(
+            model.cparams, jnp.asarray(b.x_table[0]),
+            jnp.asarray(b.x_row1[0]), jnp.asarray(b.x_row2[0]),
+            jnp.asarray(b.x_norm[0]), jnp.asarray(b.x_freq[0]),
+            jnp.asarray(b.x_rec[0])))
+        sure = np.abs(logit) > 1e-5
+        np.testing.assert_array_equal(bits[i][sure], (logit > 0)[sure])
+
+
+def test_outputs_grid_matches_frequency_heuristic():
+    """Interchangeability: the learned outputs sit on the exact chunk
+    grid the heuristic emits, with the same shapes."""
+    trace, model, _ = _setup()
+    learned = model.outputs_for(trace)
+    freq = frequency_outputs(trace, CAP, in_len=model.cfg.in_len,
+                             out_len=model.cfg.out_len)
+    np.testing.assert_array_equal(learned.chunk_starts, freq.chunk_starts)
+    assert learned.caching_bits.shape == freq.caching_bits.shape
+    assert learned.prefetch_ids.shape == freq.prefetch_ids.shape
+    assert learned.prefetch_ids.dtype == np.int64
+
+
+def test_finetune_bounded_and_deterministic():
+    """A fine-tune pass is bounded by ``finetune_steps``, moves the
+    caching params, leaves the prefetch params alone, and two models
+    fine-tuned on the same window stay byte-identical."""
+    from jax.flatten_util import ravel_pytree
+
+    trace, _, _ = _setup()
+    cfg = LearnedModelConfig(hidden=16, caching_epochs=1, prefetch_epochs=1,
+                             train_stride=8)
+    models = [LearnedRecMGModel.train_from_trace(trace, CAP, cfg)
+              for _ in range(2)]
+    window = trace.global_id[-1500:]
+    before = np.asarray(ravel_pytree(models[0].cparams)[0]).copy()
+    steps = [m.finetune(window) for m in models]
+    assert steps[0] == steps[1]
+    assert 1 <= steps[0] <= cfg.finetune_steps
+    assert models[0].finetune_steps_run == steps[0]
+    after = [np.asarray(ravel_pytree(m.cparams)[0]) for m in models]
+    assert not np.array_equal(before, after[0])  # it actually trained
+    assert np.array_equal(after[0], after[1])    # and deterministically
+    p = [np.asarray(ravel_pytree(m.pparams)[0]) for m in models]
+    assert np.array_equal(p[0], p[1])
+    # Degenerate windows are a no-op (beyond the candidate refresh).
+    assert models[0].finetune(window[:5]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Drift fine-tune acceptance (slow lane)
+# ---------------------------------------------------------------------------
+
+_DRIFT_SCALE = dict(n_tables=4, rows_per_table=512, n_accesses=12_288,
+                    seed=0, n_phases=2)
+
+
+def _drift_cell(model: str, adapt: bool) -> dict:
+    from repro.runtime.drift import DriftConfig
+    from repro.workloads import replay_scenario, scenario
+
+    return replay_scenario(
+        scenario("diurnal", **_DRIFT_SCALE), policy="recmg", model=model,
+        capacity_frac=0.12, batch=256, profile_frac=0.5, adapt=adapt,
+        adapt_cfg=DriftConfig(window=1024, hot_k=128))
+
+
+def _recovery(res: dict) -> float:
+    from repro.workloads import phase_steady_hit_rates
+
+    pre, post = phase_steady_hit_rates(res, _DRIFT_SCALE["n_phases"])
+    return post / max(pre, 1e-9)
+
+
+@pytest.mark.slow
+def test_drift_finetune_recovers_steady_hit_rate():
+    """The ISSUE's adaptation bar, end to end: diurnal switch, model
+    trained on phase 1 only.  The online fine-tune must (a) actually fire
+    through :class:`LearnedController`, (b) recover the post-switch
+    steady hit rate to >= 0.9x pre-switch, (c) beat the frozen model,
+    and (d) match or beat the PR-5 heuristic-only refresh."""
+    frozen = _drift_cell("learned", adapt=False)
+    adapt = _drift_cell("learned", adapt=True)
+    heur = _drift_cell("frequency", adapt=True)
+
+    assert adapt["drift"]["triggers"] >= 1
+    assert adapt["drift"]["finetunes"] >= 1
+    assert adapt["learned"]["finetune_steps"] >= 1
+    r_adapt, r_frozen, r_heur = map(_recovery, (adapt, frozen, heur))
+    assert r_adapt >= 0.9, (r_adapt, r_frozen)
+    assert r_adapt > r_frozen
+    assert r_adapt >= r_heur - 0.02, (r_adapt, r_heur)
+
+
+@pytest.mark.slow
+def test_drift_finetune_deterministic_double_run():
+    """Online adaptation (fine-tune included) reproduces byte-identically
+    — seeded numpy shuffles, jitted training steps, clock-free triggers."""
+    a = _drift_cell("learned", adapt=True)
+    b = _drift_cell("learned", adapt=True)
+    assert a["batch_hit_rates"] == b["batch_hit_rates"]
+    assert a["drift"] == b["drift"]
+    assert a["learned"] == b["learned"]

@@ -14,6 +14,12 @@ Pinned invariants:
 * **recmg <= LRU on the paper-target regimes** — on the stationary-skew
   and churn scenarios the ML policy's on-demand fetch count must not
   exceed LRU's (the paper's 2.2-2.8x claim direction).
+* **learned < frequency heuristic** — every paper-target cell also runs
+  ``model="learned"`` (the trained dual models,
+  :class:`repro.core.model_runtime.LearnedRecMGModel`); the trained
+  models must need strictly fewer on-demand fetches than the frequency
+  stand-in, and the learned cells get their own golden files plus a
+  training-determinism double run.
 * **replay == generated** — the replay adapter serving a saved zipf_mid
   trace produces the zipf_mid cell's metrics exactly.
 
@@ -41,6 +47,9 @@ CAP_FRAC = 0.12
 FAST_SCENARIOS = ("zipf_mid", "diurnal", "flash_crowd", "multi_tenant",
                   "churn")
 FAST_N2 = ("zipf_mid", "diurnal")
+# Learned cells train the dual models (~20-30s each at this scale): two
+# representative regimes on the fast lane, the rest on the slow lane.
+LEARNED_FAST = ("zipf_mid", "churn")
 
 
 def _cells():
@@ -60,6 +69,19 @@ def _run_cell(name: str, policy: str, n: int) -> dict:
                           capacity_frac=CAP_FRAC, batch=BATCH,
                           shards=0 if n == 1 else n)
     return res
+
+
+@lru_cache(maxsize=None)
+def _run_learned_cell(name: str) -> dict:
+    return replay_scenario(scenario(name, **SCALE), policy="recmg",
+                           model="learned", capacity_frac=CAP_FRAC,
+                           batch=BATCH)
+
+
+def _learned_params():
+    return [pytest.param(n, marks=[] if n in LEARNED_FAST
+                         else [pytest.mark.slow])
+            for n in sorted(PAPER_TARGET_SCENARIOS)]
 
 
 @pytest.mark.parametrize("name,policy,n", list(_cells()))
@@ -104,6 +126,51 @@ def test_recmg_on_demand_not_worse_than_lru(name, update_golden):
     recmg = _run_cell(name, "recmg", 1)
     assert recmg["on_demand_rows"] <= lru["on_demand_rows"], name
     assert recmg["hit_rate"] >= lru["hit_rate"], name
+
+
+@pytest.mark.parametrize("name", _learned_params())
+def test_scenario_learned_golden(name, update_golden):
+    """Every paper-target cell served by the *trained* dual models is
+    golden-pinned like the heuristic cells — training, bucketed jitted
+    inference and serving are all inside the reproduced bytes."""
+    res = _run_learned_cell(name)
+    metrics = golden_metrics(res)
+    metrics["model"] = res["model"]
+    assert json.loads(json.dumps(metrics)) == metrics
+    _check_golden(f"scenario_{name}_learned_n1", metrics, update_golden)
+
+
+@pytest.mark.parametrize("name", _learned_params())
+def test_learned_beats_frequency_heuristic(name, update_golden):
+    """The ISSUE's acceptance bar: on every paper-target cell the trained
+    models need strictly fewer on-demand fetches than the frequency
+    heuristic (and at most LRU's) — learning must buy something real over
+    the deterministic stand-in."""
+    if update_golden:
+        pytest.skip("refresh run")
+    learned = _run_learned_cell(name)
+    freq = _run_cell(name, "recmg", 1)
+    lru = _run_cell(name, "lru", 1)
+    # The bar is the paper's metric — rows fetched on demand from the
+    # slow tier (per-lookup hit rate can sit within noise of the
+    # heuristic's while the fetch volume is strictly lower).
+    assert learned["on_demand_rows"] < freq["on_demand_rows"], name
+    assert learned["on_demand_rows"] <= lru["on_demand_rows"], name
+
+
+@pytest.mark.slow
+def test_learned_training_determinism_double_run():
+    """Two fresh train+serve runs of a learned cell are byte-identical —
+    training (seeded jax init + numpy shuffles), bucketed inference and
+    serving all reproduce, so the learned golden files are stable."""
+    spec = scenario("zipf_mid", **SCALE)
+    kw = dict(policy="recmg", model="learned", capacity_frac=CAP_FRAC,
+              batch=BATCH)
+    a = replay_scenario(spec, **kw)
+    b = replay_scenario(spec, **kw)
+    assert golden_metrics(a) == golden_metrics(b)
+    assert a["batch_hit_rates"] == b["batch_hit_rates"]
+    assert a["learned"] == b["learned"]
 
 
 def test_seeded_determinism_double_run():

@@ -197,6 +197,21 @@ def test_frequency_outputs_edge_cases():
             and len(full.chunk_starts) > 0)
 
 
+def test_frequency_outputs_profile_upto_keyword_only():
+    """``profile_upto`` must be impossible to pass positionally: slipped
+    one slot past ``out_len`` it would silently profile beyond the
+    freeze point (training the "frozen" drift model on post-switch data)
+    instead of failing loudly."""
+    from repro.core.recmg import frequency_outputs
+
+    tr = make_trace(make_spec("stationary", n_tables=2, rows_per_table=16,
+                              n_accesses=200))
+    with pytest.raises(TypeError):
+        frequency_outputs(tr, 4, 15, 5, 100)
+    out = frequency_outputs(tr, 4, 15, 5, profile_upto=100)
+    assert len(out.chunk_starts) > 0
+
+
 def test_spec_with_override_and_hashability():
     spec = scenario("zipf_mid", seed=1)
     other = spec.with_(zipf_a=1.3, n_accesses=100)
