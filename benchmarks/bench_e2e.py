@@ -85,6 +85,8 @@ def fig16_17_e2e(ctx: BenchContext):
                  "compute + slow-tier model (paper §VII-F decomposition)")
         # Tail latency trajectory (measured per-batch wall time).
         ctx.emit_percentiles("fig16", policy, res)
+        # Full per-policy counter space into the artifact (reconciled).
+        ctx.emit_snapshot("fig16", policy, res["metrics"])
     lru_t = results["lru"]["modeled_e2e_ms"]
     for name in ("cm", "recmg", "recmg-oracle"):
         red = 1 - results[name]["modeled_e2e_ms"] / max(lru_t, 1e-9)
@@ -212,6 +214,57 @@ def lookup_throughput(ctx: BenchContext):
     return fast / max(slow, 1e-9)
 
 
+def tracing_overhead(ctx: BenchContext):
+    """Observability cost rows: the batched-lookup microbench with the
+    default ``NullTracer`` (tracing off — the mode every perf gate runs
+    in, so the throughput/latency gates themselves enforce near-zero
+    disabled cost) and again with a ``SpanTracer`` installed.  The
+    tracing-on slowdown is itself a gated ceiling row
+    (``tracing_on_lookup_slowdown``): span emission must stay a few
+    percent of the lookup hot path, not a profiling mode you can't
+    afford in production."""
+    import time
+
+    import numpy as np
+
+    from repro.core.tiered import TieredEmbeddingStore
+    from repro.obs.tracing import SpanTracer, install_tracer
+
+    rng = np.random.default_rng(1)
+    n_rows, d, batch = 65_536, 64, 2048
+    host = rng.normal(size=(n_rows, d)).astype(np.float32)
+    cap = n_rows // 8
+    ranks = np.minimum(rng.zipf(1.1, size=64 * batch), n_rows) - 1
+    ids = rng.permutation(n_rows)[ranks].astype(np.int64)
+    n_batches = 16 if ctx.cfg.quick else 32
+
+    def run(n_b):
+        store = TieredEmbeddingStore(host, cap, policy="lru",
+                                     warmup_batch=batch)
+        for b in range(30):
+            store.lookup(ids[b * batch: (b + 1) * batch])
+        t0 = time.perf_counter()
+        for b in range(n_b):
+            lo = (b % 30) * batch
+            store.lookup(ids[lo: lo + batch])
+        return n_b * batch / (time.perf_counter() - t0)
+
+    off = run(n_batches)
+    tracer = SpanTracer(ring_batches=8)
+    install_tracer(tracer)
+    try:
+        on = run(n_batches)
+    finally:
+        install_tracer(None)
+    ctx.emit("obs", "tracing_off_rows_per_s", round(off),
+             "NullTracer (default): the gated perf numbers run like this")
+    ctx.emit("obs", "tracing_on_rows_per_s", round(on),
+             f"SpanTracer installed ({len(tracer.events)} events)")
+    ctx.emit("obs", "tracing_on_lookup_slowdown",
+             round(off / max(on, 1e-9), 3),
+             "perf-gate ceiling: span emission stays off the hot path")
+
+
 def multi_table_facade(ctx: BenchContext):
     """Per-table facade vs. monolithic store at the same total row budget
     (per-table isolation: a hot table cannot starve the rest)."""
@@ -284,6 +337,8 @@ def runtime_pipeline(ctx: BenchContext, cfg, tr, cap, outputs, sync_res):
         ctx.emit("runtime", q, rt[q],
                  "modeled per-request latency (admission -> completion)")
     ctx.emit_percentiles("runtime", "pipelined", pipe)
+    ctx.emit_snapshot("runtime", "pipelined", pipe["metrics"],
+                      "store + rt counter space of the pipelined run")
     return red
 
 
@@ -390,6 +445,8 @@ def scenario_matrix(ctx: BenchContext):
              "same model without adaptation (the gap --adapt closes)")
     ctx.emit("scenario", "adapt_triggers", adapt["drift"]["triggers"],
              f"min jaccard {adapt['drift']['min_jaccard']}")
+    ctx.emit_snapshot("scenario", "adapt_diurnal", adapt["metrics"],
+                      "store + drift counter space of the adaptive run")
 
 
 def learned_vs_voyager(ctx: BenchContext):
@@ -435,6 +492,7 @@ def learned_vs_voyager(ctx: BenchContext):
 
 def run(ctx: BenchContext):
     lookup_throughput(ctx)
+    tracing_overhead(ctx)
     cfg, tr, cap, results, out_full = fig16_17_e2e(ctx)
     runtime_pipeline(ctx, cfg, tr, cap, out_full, results["recmg"])
     fig18_19_perf_model(ctx)

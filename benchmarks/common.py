@@ -138,6 +138,26 @@ class BenchContext:
                       round(res[f"{q}_batch_ms"], 3),
                       derived or f"measured per-batch wall {q}")
 
+    def emit_snapshot(self, bench: str, name: str, snap: dict,
+                      derived: str = ""):
+        """Store a metrics-registry snapshot (the ``metrics`` entry of a
+        ``serve_trace`` / ``replay_scenario`` result) as one artifact row
+        — full flat counter space in ``bench_results.json``, a one-line
+        summary on stdout — after asserting its accounting identities
+        reconcile (the bench is a reconciliation surface too)."""
+        from repro.obs import MetricsRegistry, reconcile
+
+        reconcile(metrics=snap, strict=True)
+        flat = {k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in MetricsRegistry.from_snapshot(snap)
+                .as_dict().items()}
+        self.rows.append({"bench": bench, "name": f"{name}_metrics",
+                          "value": flat,
+                          "derived": derived or "metrics-registry snapshot "
+                          "(reconciled)"})
+        print(f"{bench},{name}_metrics,<{len(flat)} metrics: "
+              f"reconciled>,{derived}", flush=True)
+
 
 def geomean(xs) -> float:
     xs = np.asarray([max(x, 1e-12) for x in xs], dtype=np.float64)

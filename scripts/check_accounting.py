@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Accounting-identity gate: assert the serving stack's counters
+reconcile, standalone.
+
+Reads a metrics snapshot (``serve --metrics-out``, or the ``metrics``
+entry of a bench artifact) and optionally the matching Chrome trace
+(``serve --trace-out``), then runs every identity in
+``repro.obs.reconcile``:
+
+* ``store.fast.hits + store.fast.misses == store.lookups``
+* ``rt.pf.submitted == deduped + cancelled_resident + issued + queued``
+* ``rt.pf.channel_scheduled == timely + late + unused + eta_overwritten
+  + eta_pending``
+* ``0 <= rt.stall_ms <= rt.demand_fetch_ms`` with ``stall + hidden ==
+  demand_fetch``
+* sharded aggregate ``store.*`` == sum over ``shard.<i>.store.*``
+* trace cross-check: span args summed over the trace == the counters.
+
+Exit 1 on any violation.  ``--selftest`` serves a tiny traced scenario
+in-process and checks it end to end (no files needed) — the CI fast
+lane runs this.
+
+    PYTHONPATH=src python scripts/check_accounting.py \
+        --metrics runs/metrics.json [--trace runs/trace.json]
+    PYTHONPATH=src python scripts/check_accounting.py --selftest
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def selftest() -> int:
+    """Serve a tiny traced scenario in-process; every identity must hold
+    and the deliberate-violation probes must be caught."""
+    from repro.obs import (check_all, reconcile, validate_chrome_trace)
+    from repro.obs.tracing import SpanTracer, install_tracer
+    from repro.workloads import parse_workload
+    from repro.workloads.harness import replay_scenario
+
+    tr = SpanTracer(ring_batches=8)
+    install_tracer(tr)
+    try:
+        res = replay_scenario(parse_workload("zipf_hot:n_accesses=6000"),
+                              policy="recmg", adapt=True)
+    finally:
+        install_tracer(None)
+    trace = tr.chrome_trace()
+    problems = validate_chrome_trace(trace)
+    problems += reconcile(metrics=res["metrics"], trace=trace, strict=False)
+    if problems:
+        print("selftest: traced scenario does NOT reconcile:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+
+    # The checker must also *catch* broken books: a dropped hit and an
+    # unaccounted prefetch fate are both violations by construction.
+    broken = {"store.lookups": 100, "store.fast.hits": 60,
+              "store.fast.misses": 39}
+    if not check_all(broken):
+        print("selftest: checker missed a hits+misses!=lookups violation")
+        return 1
+    broken_pf = {"rt.pf.submitted": 10, "rt.pf.deduped": 1,
+                 "rt.pf.cancelled_resident": 1, "rt.pf.issued": 7,
+                 "rt.pf.queued": 0}
+    if not check_all(broken_pf):
+        print("selftest: checker missed a prefetch-fate violation")
+        return 1
+    print("selftest: traced scenario reconciles; violations are caught")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", default="",
+                    help="metrics snapshot JSON (serve --metrics-out)")
+    ap.add_argument("--trace", default="",
+                    help="Chrome trace JSON (serve --trace-out); also "
+                         "schema/monotonicity-validated")
+    ap.add_argument("--selftest", action="store_true",
+                    help="serve a tiny traced scenario in-process and "
+                         "check it (no files needed)")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        return selftest()
+    if not args.metrics and not args.trace:
+        ap.error("pass --metrics and/or --trace (or --selftest)")
+
+    from repro.obs import reconcile, validate_chrome_trace
+
+    problems = []
+    trace = _load(args.trace) if args.trace else None
+    if trace is not None:
+        problems += validate_chrome_trace(trace)
+    metrics = _load(args.metrics) if args.metrics else None
+    problems += reconcile(metrics=metrics, trace=trace, strict=False)
+    if problems:
+        print("ACCOUNTING VIOLATIONS:")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    checked = [s for s, on in (("metrics", metrics is not None),
+                               ("trace", trace is not None)) if on]
+    print(f"accounting OK ({' + '.join(checked)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

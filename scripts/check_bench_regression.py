@@ -31,6 +31,14 @@ One guards the learned serving path (bench ``learned``; counter-derived):
   §VII-C claim is directional — RecMG must fetch less than Voyager — so
   no tolerance may push the ceiling past parity).
 
+One guards the observability layer (bench ``obs``):
+
+* ``tracing_on_lookup_slowdown`` — batched-lookup throughput with a
+  ``SpanTracer`` installed relative to the default ``NullTracer``; a
+  ceiling metric (span emission must stay a few percent of the hot
+  path; the tracing-*off* cost is already guarded by the two hot-path
+  gates above, which run with tracing off).
+
 A metric regresses when it moves more than ``tolerance`` (default 30%)
 past its baseline in the bad direction.  Exit 1 on any regression —
 wired into the CI bench-smoke lane after the bench_e2e smoke.
@@ -105,6 +113,8 @@ def main(argv=None) -> int:
     check_floor(("scenario", "adapt_recovery"), "adapt_recovery")
     check_ceiling(("learned", "recmg_vs_voyager_on_demand_ratio"),
                   "recmg_vs_voyager_on_demand_ratio", cap=1.0)
+    check_ceiling(("obs", "tracing_on_lookup_slowdown"),
+                  "tracing_on_lookup_slowdown")
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)

@@ -56,6 +56,7 @@ from repro.core.prefetch_model import (PrefetchModelConfig, _nn_decode,
                                        train_prefetch_model)
 from repro.core.recmg import RecMGOutputs
 from repro.core.trace import Trace
+from repro.obs.tracing import get_tracer
 from repro.optim.adamw import OptConfig, init_opt
 from repro.runtime.drift import AdaptiveController, DriftConfig
 
@@ -357,8 +358,16 @@ class LearnedController:
         items = self.inner.on_batch(ids, hits, batch_index)
         if self.inner.refreshes > self._refreshes_seen:
             self._refreshes_seen = self.inner.refreshes
-            self.model.finetune(self.inner.recent_ids())
+            tr = get_tracer()
+            if tr.enabled:
+                t0 = tr.clock.now()
+            steps = self.model.finetune(self.inner.recent_ids())
             self.outputs_ref.outputs = self.model.outputs_for(self.trace)
+            if tr.enabled:
+                tr.add_span("model", "finetune", t0, tr.clock.now() - t0,
+                            track="model", args={"steps": steps})
+                tr.add_instant("model", "swap", track="model",
+                               args={"finetunes": self.model.finetunes})
         return items
 
     def as_dict(self) -> dict:
@@ -366,6 +375,20 @@ class LearnedController:
         d.update(finetunes=self.model.finetunes,
                  finetune_steps=self.model.finetune_steps_run)
         return d
+
+    def publish(self, reg, prefix: str = "model"):
+        """Publish the drift counters plus the learned-model telemetry
+        into a :class:`repro.obs.MetricsRegistry`."""
+        self.inner.publish(reg)
+        mt = self.model.telemetry()
+        reg.counter(f"{prefix}.finetunes").inc(mt["finetunes"])
+        reg.counter(f"{prefix}.finetune_steps").inc(mt["finetune_steps"])
+        reg.gauge(f"{prefix}.n_candidates").set(mt["n_candidates"])
+        if mt["caching_loss"] is not None:
+            reg.gauge(f"{prefix}.caching_loss").set(mt["caching_loss"])
+        if mt["prefetch_loss"] is not None:
+            reg.gauge(f"{prefix}.prefetch_loss").set(mt["prefetch_loss"])
+        return reg
 
 
 def voyager_outputs(trace: Trace, capacity: int, in_len: int = 15,

@@ -204,3 +204,12 @@ class MultiTableTieredStore:
 
     def per_table_hit_rates(self) -> List[float]:
         return [s.stats.hit_rate for s in self.stores]
+
+    def publish_metrics(self, reg):
+        """Publish the aggregate ``store.*`` view plus one
+        ``table.<t>.store.*`` namespace per sparse feature."""
+        self.stats.publish(reg, prefix="store")
+        reg.gauge("tables.n_tables").set(len(self.stores))
+        for t, st in enumerate(self.stores):
+            st.stats.publish(reg, prefix=f"table.{t}.store")
+        return reg

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tiered import TierStats, TieredEmbeddingStore
+from repro.obs.tracing import get_tracer
 from repro.sharding.embedding_shard import (ShardPlan, make_plan,
                                             trace_frequencies)
 
@@ -96,8 +97,10 @@ class ShardedTieredStore:
                 PrefetchEngine(st, telemetry=tel, clock=self.clock,
                                scheduler="inline",
                                fetch_us_per_row=st.fetch_us_per_row,
-                               fetch_us_fixed=self.fetch_us_fixed)
-                for st, tel in zip(self.stores, self.engine_telemetry)
+                               fetch_us_fixed=self.fetch_us_fixed,
+                               trace_track=f"pf-shard-{s}")
+                for s, (st, tel) in enumerate(zip(self.stores,
+                                                  self.engine_telemetry))
             ]
 
     @classmethod
@@ -134,10 +137,13 @@ class ShardedTieredStore:
         out = np.empty((len(gid), self.emb_dim), self.out_dtype)
         missed_any = False
         critical_us = 0.0
+        tr = get_tracer()
         for s in np.flatnonzero(loads).tolist():
             m = shard == s
             st = self.stores[s]
             f0, od0 = st.stats.modeled_fetch_s, st.stats.on_demand_rows
+            if tr.enabled:
+                t_s = tr.clock.now()
             # Timeliness probe only when this shard's channel has fetches
             # in flight — skips the per-batch unique() on cold paths.
             if self._engines is not None and self._engines[s]._pf_eta:
@@ -151,6 +157,12 @@ class ShardedTieredStore:
                 missed_any = True
                 d_us += self.fetch_us_fixed
             critical_us = max(critical_us, d_us)
+            if tr.enabled:
+                # Per-shard route+gather window on this worker's track.
+                tr.add_span("shard", "lookup", t_s, tr.clock.now() - t_s,
+                            track=f"shard-{s}", args={
+                                "shard": s, "rows": int(loads[s]),
+                                "miss_rows": st.stats.on_demand_rows - od0})
         if missed_any:
             self._fixed_fetch_s += self.fetch_us_fixed * 1e-6
         self._critical_fetch_s += critical_us * 1e-6
@@ -273,3 +285,25 @@ class ShardedTieredStore:
 
     def per_shard_hit_rates(self) -> List[float]:
         return [st.stats.hit_rate for st in self.stores]
+
+    def publish_metrics(self, reg):
+        """Publish the aggregate ``store.*`` view, every worker's
+        ``shard.<i>.store.*`` / ``shard.<i>.rt.*`` namespaces, and the
+        facade load/skew gauges — the layout
+        :func:`repro.obs.reconcile.check_sharded` reconciles (aggregate ==
+        sum of shards)."""
+        self.stats.publish(reg, prefix="store")
+        reg.gauge("sharded.n_shards").set(self.n_shards)
+        reg.gauge("sharded.load_imbalance").set(self.load_imbalance())
+        reg.gauge("sharded.max_batch_imbalance").set(
+            self._max_batch_imbalance)
+        reg.counter("sharded.critical_fetch_ms").inc(
+            self._critical_fetch_s * 1e3)
+        mean_load = max(float(self._shard_lookups.mean()), 1e-12)
+        for s, st in enumerate(self.stores):
+            st.stats.publish(reg, prefix=f"shard.{s}.store")
+            reg.gauge(f"shard.{s}.imbalance").set(
+                float(self._shard_lookups[s]) / mean_load)
+            if self._engines is not None:
+                self._engines[s].publish(reg, prefix=f"shard.{s}.rt")
+        return reg

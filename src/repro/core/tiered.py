@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.buffer_manager import RecMGBuffer
+from repro.obs.tracing import get_tracer
 
 
 def _bucket(n: int) -> int:
@@ -130,6 +131,7 @@ class TierStats:
     batches: int = 0
     lookups: int = 0
     hits: int = 0
+    misses: int = 0  # request-level fast-tier misses (hits + misses == lookups)
     prefetch_hits: int = 0
     on_demand_rows: int = 0
     evictions: int = 0
@@ -148,7 +150,7 @@ class TierStats:
         # (summing rounded rates across runs is meaningless).
         return {
             "batches": self.batches, "lookups": self.lookups,
-            "hits": self.hits,
+            "hits": self.hits, "misses": self.misses,
             "hit_rate": round(self.hit_rate, 4),
             "prefetch_hits": self.prefetch_hits,
             "on_demand_rows": self.on_demand_rows,
@@ -161,12 +163,30 @@ class TierStats:
 
     def merge(self, other: "TierStats") -> "TierStats":
         """Aggregate (for the multi-table facade)."""
-        for f in ("batches", "lookups", "hits", "prefetch_hits",
+        for f in ("batches", "lookups", "hits", "misses", "prefetch_hits",
                   "on_demand_rows", "evictions"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for f in ("fetch_s", "gather_s", "model_s", "modeled_fetch_s"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         return self
+
+    def publish(self, reg, prefix: str = "store"):
+        """Publish into a :class:`repro.obs.MetricsRegistry` under the
+        ``store.*`` namespace (see docs/architecture.md)."""
+        for key, val in (
+            ("batches", self.batches), ("lookups", self.lookups),
+            ("fast.hits", self.hits), ("fast.misses", self.misses),
+            ("fast.prefetch_hits", self.prefetch_hits),
+            ("fast.on_demand_rows", self.on_demand_rows),
+            ("fast.evictions", self.evictions),
+            ("time.fetch_s", self.fetch_s),
+            ("time.gather_s", self.gather_s),
+            ("time.model_s", self.model_s),
+            ("time.modeled_fetch_s", self.modeled_fetch_s),
+        ):
+            reg.counter(f"{prefix}.{key}").inc(val)
+        reg.gauge(f"{prefix}.fast.hit_rate").set(self.hit_rate)
+        return reg
 
 
 class TieredEmbeddingStore:
@@ -491,13 +511,19 @@ class TieredEmbeddingStore:
         """Shared lookup pipeline; returns (padded device rows, true batch
         size, gather timer start) — callers slice and sync."""
         self._drain_staged()
+        tr = get_tracer()
+        if tr.enabled:  # off cost: one global read + attr check per batch
+            t_span = tr.clock.now()
+            ev0 = self.stats.evictions
         ids = np.asarray(ids).ravel()
         self.stats.batches += 1
         self.stats.lookups += ids.size
         uniq, inv = np.unique(ids, return_inverse=True)
         slots_u = self._slot_map[uniq]
         miss_mask = slots_u < 0
-        self.stats.hits += int(np.count_nonzero(~miss_mask[inv]))
+        n_hit = int(np.count_nonzero(~miss_mask[inv]))
+        self.stats.hits += n_hit
+        self.stats.misses += int(ids.size) - n_hit
         hit_slots = slots_u[~miss_mask]
         pf = self._pf_flag[hit_slots]
         n_pf = int(np.count_nonzero(pf))
@@ -508,6 +534,8 @@ class TieredEmbeddingStore:
         missing = uniq[miss_mask]
         if missing.size:
             t0 = time.perf_counter()
+            if tr.enabled:
+                t_admit = tr.clock.now()
             rows = self.host[missing]
             kept = self._admit(missing)
             wkeys = missing[kept]
@@ -520,6 +548,10 @@ class TieredEmbeddingStore:
             self.stats.modeled_fetch_s += (
                 self.fetch_us_fixed + self.fetch_us_per_row * missing.size
             ) * 1e-6
+            if tr.enabled:
+                tr.add_span("store", "admit", t_admit,
+                            tr.clock.now() - t_admit, track="store",
+                            args={"miss_rows": int(missing.size)})
             slots_u = self._slot_map[uniq]  # refresh post-admission
 
         if self.policy == "lru":
@@ -531,6 +563,8 @@ class TieredEmbeddingStore:
             self._clock += uniq.size
 
         t0 = time.perf_counter()
+        if tr.enabled:
+            t_gather = tr.clock.now()
         # Device-resident gather: one fused jitted pass does the slot
         # gather, the overflow where-select, and the unique->request
         # expansion, so the result never bounces through the host.  The
@@ -563,6 +597,19 @@ class TieredEmbeddingStore:
                                   jnp.asarray(ov), jnp.asarray(hrows))
         else:
             out = self._gather_inv(*gather_args, jnp.asarray(iv))
+        if tr.enabled:
+            tr.add_span("store", "gather", t_gather,
+                        tr.clock.now() - t_gather, track="store",
+                        args={"uniq": int(u)})
+            # Span args carry the batch's exact counter deltas — the trace
+            # <-> metrics reconciliation sums these over all lookup spans.
+            tr.add_span("store", "lookup", t_span, tr.clock.now() - t_span,
+                        track="store", args={
+                            "ids": m_ids, "uniq": int(u),
+                            "hit_ids": n_hit, "miss_ids": m_ids - n_hit,
+                            "miss_rows": int(missing.size),
+                            "evictions": self.stats.evictions - ev0,
+                        })
         return out, m_ids, t0
 
     def _write_rows(self, slots: np.ndarray, rows: np.ndarray):
@@ -612,6 +659,10 @@ class TieredEmbeddingStore:
     def apply_model_outputs(self, trunk: np.ndarray, bits: np.ndarray,
                             prefetch_ids: np.ndarray):
         """Algorithm 1, invoked between batches (pipelined)."""
+        tr = get_tracer()
+        if tr.enabled:
+            t_pop = tr.clock.now()
+            ev0 = self.stats.evictions
         trunk = np.asarray(trunk, np.int64).ravel()
         bits = np.asarray(bits).ravel()
         m = min(trunk.size, bits.size)  # zip semantics: shorter side wins
@@ -622,17 +673,23 @@ class TieredEmbeddingStore:
             pf = self._new_prefetch_keys(pf_ids)
             if pf.size:
                 self._fetch_prefetch(pf)
-            return
-        t0 = time.perf_counter()
-        # Only rank RESIDENT keys (pipelined outputs can reference vectors
-        # already evicted; ranking them would desync priorities/residency).
-        res = self._slot_map[trunk] >= 0
-        self.recmg.load_embeddings(trunk[res], bits[res], [])
-        pf = self._new_prefetch_keys(pf_ids)
-        if pf.size:
-            self._fetch_prefetch(pf)
-            self.recmg.set_priorities(pf, self.recmg.ev)
-        self.stats.model_s += time.perf_counter() - t0
+        else:
+            t0 = time.perf_counter()
+            # Only rank RESIDENT keys (pipelined outputs can reference
+            # vectors already evicted; ranking them would desync
+            # priorities/residency).
+            res = self._slot_map[trunk] >= 0
+            self.recmg.load_embeddings(trunk[res], bits[res], [])
+            pf = self._new_prefetch_keys(pf_ids)
+            if pf.size:
+                self._fetch_prefetch(pf)
+                self.recmg.set_priorities(pf, self.recmg.ev)
+            self.stats.model_s += time.perf_counter() - t0
+        if tr.enabled:
+            tr.add_span("store", "populate", t_pop,
+                        tr.clock.now() - t_pop, track="store", args={
+                            "trunk": int(trunk.size), "pf_rows": int(pf.size),
+                            "evictions": self.stats.evictions - ev0})
 
     def _new_prefetch_keys(self, pf_ids: np.ndarray) -> np.ndarray:
         """Non-resident prefetch targets, deduplicated, first-occurrence
@@ -657,3 +714,8 @@ class TieredEmbeddingStore:
     def modeled_batch_ms(self) -> float:
         """Analytic per-batch latency contribution of the slow tier."""
         return 1e3 * self.stats.modeled_fetch_s / max(self.stats.batches, 1)
+
+    def publish_metrics(self, reg):
+        """Publish this store's counters under ``store.*`` (uniform
+        facade/store surface for the serving entry points)."""
+        return self.stats.publish(reg, prefix="store")

@@ -133,6 +133,7 @@ class ReferenceTieredStore:
             1 for k in ids if int(k) in missing_set
         ) if (missing_set := set(missing)) else len(ids)
         self.stats.hits += n_hit
+        self.stats.misses += len(ids) - n_hit
         for k in ids:
             k = int(k)
             if k in self.prefetched and k not in missing_set:

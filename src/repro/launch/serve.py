@@ -27,6 +27,8 @@ from repro.core.serving import MultiTableTieredStore
 from repro.core.tiered import TieredEmbeddingStore
 from repro.core.trace import Trace, TraceGenConfig, generate_trace
 from repro.models.dlrm import init_dlrm
+from repro.obs import MetricsRegistry
+from repro.obs.tracing import get_tracer
 
 
 def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
@@ -189,10 +191,18 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         # ``compute_us`` pins the modeled device time per batch (so the
         # overlap window uses one cost model for both fetch and compute);
         # None overlaps against the measured wall-clock forward instead.
+        # When a tracer with a virtual clock is installed, the runtime
+        # shares it so the trace timeline and the modeled pipeline
+        # timeline are one and the same.
+        _tr = get_tracer()
+        rt_clock = _tr.clock if (_tr.enabled
+                                 and hasattr(_tr.clock, "advance_to")) \
+            else None
         rt = PipelinedRuntime(store, RuntimeConfig(
             max_batch=batch_queries, pipeline_depth=pipeline_depth,
             interarrival_us=interarrival_us, scheduler=scheduler,
             fetch_us_per_row=fetch_us_per_row, compute_us=compute_us),
+            clock=rt_clock,
             batch_hook=controller.on_batch if controller else None)
 
         def step(b, emb):
@@ -208,7 +218,10 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         lat = rt.wall_batch_s
     else:
         lat = []
+        _tr = get_tracer()
         for b in range(n_batches):
+            if _tr.enabled:
+                _tr.set_batch(b)
             ids = gid[b * per_batch: (b + 1) * per_batch]
             pre_hits = store.stats.hits
             t0 = time.perf_counter()
@@ -271,6 +284,17 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     if shards:
         st["shard"] = store.shard_telemetry()
         st["shard_load_imbalance"] = st["shard"]["load_imbalance"]
+
+    # Unified metrics registry: every telemetry producer of the run
+    # publishes into one namespace, so the reconciliation checker (and
+    # ``--metrics-out``) sees a single flat counter space.
+    reg = MetricsRegistry()
+    store.publish_metrics(reg)
+    if rt is not None:
+        rt.publish(reg)
+    if controller is not None and hasattr(controller, "publish"):
+        controller.publish(reg)
+    st["metrics"] = reg.snapshot()
     return st
 
 
@@ -338,6 +362,19 @@ def main(argv=None):
                     help="drift-adaptive serving: windowed hit-rate + "
                          "hot-set-Jaccard drift detector, online refresh "
                          "of the caching/prefetch features on trigger")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run to this path (enables span tracing; open at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the run's metrics-registry snapshot JSON "
+                         "to this path (check it with "
+                         "scripts/check_accounting.py)")
+    ap.add_argument("--flight-recorder", default="",
+                    help="also write the flight-recorder ring — spans of "
+                         "the last --trace-ring batches — to this path")
+    ap.add_argument("--trace-ring", type=int, default=64,
+                    help="flight-recorder ring size in batches")
     args = ap.parse_args(argv)
 
     cfg = get_config("dlrm-recmg").reduced()
@@ -394,15 +431,57 @@ def main(argv=None):
                 trace, capacity, lcfg, log=print)
             outputs = model_rt.outputs_for(trace)
 
-    res = serve_trace(cfg, params, trace, capacity, pol, outputs,
-                      batch_queries=args.batch_queries,
-                      multi_table=args.multi_table,
-                      shards=args.shards, placement=args.placement,
-                      async_prefetch=args.async_prefetch,
-                      pipeline_depth=args.pipeline_depth,
-                      scheduler=args.scheduler, adapt=args.adapt,
-                      model=model_rt, log=print)
-    print({k: v for k, v in res.items()})
+    tracer = None
+    if args.trace_out or args.flight_recorder:
+        from repro.obs.tracing import SpanTracer, install_tracer
+        from repro.runtime.clock import VirtualClock
+
+        # Pipelined serving runs on the modeled (virtual) timeline, so
+        # the trace does too; synchronous serving traces wall time.
+        clock = VirtualClock() if args.async_prefetch else None
+        tracer = SpanTracer(clock=clock, ring_batches=args.trace_ring)
+        install_tracer(tracer)
+
+    try:
+        res = serve_trace(cfg, params, trace, capacity, pol, outputs,
+                          batch_queries=args.batch_queries,
+                          multi_table=args.multi_table,
+                          shards=args.shards, placement=args.placement,
+                          async_prefetch=args.async_prefetch,
+                          pipeline_depth=args.pipeline_depth,
+                          scheduler=args.scheduler, adapt=args.adapt,
+                          model=model_rt, log=print)
+    finally:
+        if tracer is not None:
+            install_tracer(None)
+
+    if args.metrics_out:
+        import json
+
+        with open(args.metrics_out, "w") as f:
+            json.dump(res["metrics"], f, indent=1, sort_keys=True)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if tracer is not None:
+        from repro.obs import reconcile, validate_chrome_trace
+
+        trace_obj = tracer.chrome_trace()
+        if args.trace_out:
+            tracer.write(args.trace_out)
+            print(f"trace ({len(trace_obj['traceEvents'])} events) -> "
+                  f"{args.trace_out}")
+        if args.flight_recorder:
+            tracer.write(args.flight_recorder, flight_only=True)
+            print(f"flight recorder -> {args.flight_recorder}")
+        problems = validate_chrome_trace(trace_obj)
+        problems += reconcile(metrics=res["metrics"], trace=trace_obj,
+                              strict=False)
+        if problems:
+            print("RECONCILIATION PROBLEMS:")
+            for p in problems:
+                print(f"  {p}")
+            raise SystemExit(1)
+        print("trace/metrics reconciliation: OK")
+    print({k: v for k, v in res.items() if k != "metrics"})
     return res
 
 

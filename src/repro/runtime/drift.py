@@ -35,6 +35,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.tracing import get_tracer
+
 _EMPTY = np.empty(0, np.int64)
 
 
@@ -123,6 +125,11 @@ class DriftDetector:
             fired = True
         if fired:
             self.triggers += 1
+            tr = get_tracer()
+            if tr.enabled:
+                tr.add_instant("drift", "trigger", track="drift", args={
+                    "window": self.windows, "jaccard": round(jac, 4),
+                    "hit_rate": round(win_hr, 4)})
             self._cooldown = cfg.cooldown_windows
             # Adopt the post-drift regime as the new normal so a single
             # switch does not re-trigger every following window.
@@ -136,6 +143,21 @@ class DriftDetector:
         self._prev_hot = hot
         self._ids, self._n, self._hits = [], 0, 0
         return fired
+
+    def publish(self, reg, prefix: str = "drift"):
+        """Publish into a :class:`repro.obs.MetricsRegistry` under the
+        ``drift.*`` namespace."""
+        for key, val in (("accesses", self.accesses),
+                         ("windows", self.windows),
+                         ("triggers", self.triggers),
+                         ("jaccard_triggers", self.jaccard_triggers),
+                         ("hitrate_triggers", self.hitrate_triggers)):
+            reg.counter(f"{prefix}.{key}").inc(val)
+        reg.gauge(f"{prefix}.last_jaccard").set(self.last_jaccard)
+        reg.gauge(f"{prefix}.min_jaccard").set(self.min_jaccard)
+        reg.gauge(f"{prefix}.last_window_hit_rate").set(
+            self.last_window_hit_rate)
+        return reg
 
     def as_dict(self) -> dict:
         return {
@@ -221,6 +243,9 @@ class AdaptiveController:
     def _refresh_pool(self) -> List[Tuple]:
         from repro.core.cache_sim import top_ids_by_count
 
+        tr = get_tracer()
+        if tr.enabled:
+            t0 = tr.clock.now()
         hot = top_ids_by_count(np.concatenate(self._recent), self.capacity)
         self._pool = np.sort(hot)
         # Truncate the bounded prefetch budget in HEAT order (``hot`` is
@@ -229,6 +254,10 @@ class AdaptiveController:
         pf = hot[~self.store.resident_mask(hot)][: self.cfg.refresh_pf]
         self.refreshes += 1
         self.refresh_pf_rows += int(pf.size)
+        if tr.enabled:
+            tr.add_span("drift", "refresh", t0, tr.clock.now() - t0,
+                        track="drift",
+                        args={"pool": int(hot.size), "pf_rows": int(pf.size)})
         return [(_EMPTY, _EMPTY, pf)] if pf.size else []
 
     def _rerank_chunk(self, ids: np.ndarray) -> Tuple:
@@ -248,6 +277,15 @@ class AdaptiveController:
                  refresh_pf_rows=self.refresh_pf_rows,
                  rerank_rows=self.rerank_rows)
         return d
+
+    def publish(self, reg, prefix: str = "drift"):
+        """Detector counters plus the controller's refresh counters."""
+        self.detector.publish(reg, prefix)
+        for key, val in (("refreshes", self.refreshes),
+                         ("refresh_pf_rows", self.refresh_pf_rows),
+                         ("rerank_rows", self.rerank_rows)):
+            reg.counter(f"{prefix}.{key}").inc(val)
+        return reg
 
 
 # The hook signature both serving paths use.

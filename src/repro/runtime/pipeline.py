@@ -36,6 +36,7 @@ from typing import Callable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.tracing import get_tracer
 from repro.runtime.clock import Clock, VirtualClock
 from repro.runtime.prefetch_engine import PrefetchEngine
 from repro.runtime.telemetry import RuntimeTelemetry
@@ -195,6 +196,9 @@ class PipelinedRuntime:
     def _process(self, reqs: List[Request], close_us: float, step_fn):
         cfg, tel = self.cfg, self.telemetry
         b = self._batch_index
+        tr = get_tracer()
+        if tr.enabled:
+            tr.set_batch(b)  # correlates store/pf/rt events for this batch
         done = self._compute_done_us
         prev_done = done[-1] if done else 0.0
         # Back-pressure: at depth d the host may only run while batch
@@ -227,6 +231,20 @@ class PipelinedRuntime:
             else compute_s * 1e6
         compute_done = compute_start + compute_us
         self.wall_batch_s.append(lookup_wall_s + compute_s)
+        if tr.enabled:
+            # Modeled-timeline lanes, fully explicit timestamps: the host
+            # lane carries the on-demand fetch window, the device lane the
+            # stall (the part of the fetch the overlap could not hide)
+            # followed by the dense forward.
+            rid0 = reqs[0].rid
+            tr.add_span("rt", "fetch", host_start, fetch_us, track="host",
+                        args={"rid0": rid0, "n_req": len(reqs)})
+            if stall > 0.0:
+                tr.add_span("rt", "stall", max(prev_done, host_start),
+                            stall, track="device", args={"rid0": rid0})
+            tr.add_span("rt", "compute", compute_start, compute_us,
+                        track="device",
+                        args={"rid0": rid0, "n_req": len(reqs)})
 
         # ---- bookkeeping ----
         tel.batches += 1
@@ -257,3 +275,9 @@ class PipelinedRuntime:
 
     def results(self) -> dict:
         return self.telemetry.as_dict()
+
+    def publish(self, reg, prefix: str = "rt"):
+        """Publish runtime telemetry + engine live-state gauges into a
+        :class:`repro.obs.MetricsRegistry` (the engine shares this
+        runtime's telemetry object, so one call covers both)."""
+        return self.engine.publish(reg, prefix)

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.tracing import get_tracer
 from repro.runtime.clock import Clock, VirtualClock
 from repro.runtime.telemetry import RuntimeTelemetry
 
@@ -76,10 +77,15 @@ class PrefetchEngine:
                  clock: Optional[Clock] = None, scheduler: str = "inline",
                  max_queue: int = 64, coalesce_rows: int = 4096,
                  fetch_us_per_row: float = 10.0, fetch_us_fixed: float = 30.0,
-                 lock: Optional[threading.Lock] = None):
+                 lock: Optional[threading.Lock] = None,
+                 trace_track: str = "pf"):
         if scheduler not in ("inline", "thread"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.store = store
+        # Each engine models its own fetch channel, so each needs its own
+        # trace track — two engines sharing one track would interleave
+        # non-monotone span ends.
+        self.trace_track = trace_track
         self.telemetry = telemetry if telemetry is not None \
             else RuntimeTelemetry()
         self.clock = clock or VirtualClock()
@@ -157,14 +163,28 @@ class PrefetchEngine:
         if not fresh.size:
             return
         cost = self.fetch_us_fixed + self.fetch_us_per_row * fresh.size
-        self._channel_free_us = max(self._channel_free_us, now) + cost
-        self.telemetry.pf_fetch_ms += cost * 1e-3
+        start = max(self._channel_free_us, now)
+        self._channel_free_us = start + cost
+        tel = self.telemetry
+        tel.pf_fetch_ms += cost * 1e-3
+        tel.pf_channel_scheduled += int(fresh.size)
         done = self._channel_free_us
+        tr = get_tracer()
+        if tr.enabled:
+            # Modeled background-channel occupancy [start, start+cost).
+            tr.add_span("pf", "channel", start, cost,
+                        track=self.trace_track,
+                        args={"rows": int(fresh.size)})
+        eta = self._pf_eta
         for k in fresh.tolist():
             # Overwrite: a key can only be rescheduled after its previous
             # issue retired (in-flight dedup), i.e. this is a genuinely
-            # new fetch — keeping the old ETA would fake timeliness.
-            self._pf_eta[k] = done
+            # new fetch — keeping the old ETA would fake timeliness.  The
+            # lost ETA is counted so the timeliness identity still closes
+            # (channel_scheduled == timely+late+unused+overwritten+pending).
+            if k in eta:
+                tel.pf_eta_overwritten += 1
+            eta[k] = done
 
     # ---------------- worker side ----------------
 
@@ -277,15 +297,39 @@ class PrefetchEngine:
         if not self._pf_eta:
             return
         tel = self.telemetry
+        n_timely = n_late = 0
         for k in np.asarray(uniq_ids).ravel().tolist():
             eta = self._pf_eta.pop(k, None)
             if eta is None:
                 continue
             if eta <= now_us:
                 tel.pf_timely += 1
+                n_timely += 1
             else:
                 tel.pf_late += 1
+                n_late += 1
                 tel.pf_late_ms += (eta - now_us) * 1e-3
+        if n_timely or n_late:
+            tr = get_tracer()
+            if tr.enabled:
+                tr.add_instant("pf", "demand", ts=now_us,
+                               track=self.trace_track,
+                               args={"timely": n_timely, "late": n_late})
+    def publish(self, reg, prefix: str = "rt"):
+        """Publish the engine's telemetry plus its live-state gauges into a
+        :class:`repro.obs.MetricsRegistry`.  The gauges close the fate
+        identities mid-run: ``pf.queued`` (submitted rows still staged,
+        zero after a drain) and ``pf.eta_pending`` (channel fetches not
+        yet demanded — becomes ``pf.unused`` at close)."""
+        self.telemetry.publish(reg, prefix)
+        if self._q is None:
+            queued = sum(int(it.prefetch.size) for it in self._pending)
+        else:  # thread mode: publish after a drain/close barrier
+            queued = 0
+        reg.gauge(f"{prefix}.pf.queued").set(queued)
+        reg.gauge(f"{prefix}.pf.eta_pending").set(len(self._pf_eta))
+        return reg
+
     # ---------------- lifecycle ----------------
 
     def close(self):

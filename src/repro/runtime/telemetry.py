@@ -13,9 +13,19 @@ timeline (see :mod:`repro.runtime.clock`), reported in ms.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
+
+from repro.obs.metrics import Reservoir
+
+# Per-request latency samples are kept in a bounded deterministic
+# reservoir (exact below the cap, Algorithm-R subsample past it) instead
+# of an unbounded list — a long-running service must not grow memory with
+# request count.  ``len()`` still reports the total observed count and
+# iteration yields the retained samples, so existing consumers are
+# unchanged; percentiles stay exact for runs under the cap.
+LATENCY_RESERVOIR_CAP = 16384
 
 
 def latency_percentiles(samples_ms, prefix: str = "") -> Dict[str, float]:
@@ -48,13 +58,22 @@ class RuntimeTelemetry:
     pf_late_ms: float = 0.0        # total modeled lateness
     pf_unused: int = 0             # never demanded before run end
     pf_fetch_ms: float = 0.0       # background-channel traffic (modeled)
+    pf_channel_scheduled: int = 0  # rows put on the modeled fetch channel
+    pf_eta_overwritten: int = 0    # rescheduled rows whose old ETA was lost
     rank_cancelled_evicted: int = 0  # rankings dropped: evicted pre-issue
     # ---- critical path ----
     demand_fetch_ms: float = 0.0   # total on-demand slow-tier cost
     stall_ms: float = 0.0          # part of it the pipeline could NOT hide
     compute_ms: float = 0.0        # modeled device compute
-    # ---- per-request latency (modeled us) ----
-    latencies_us: List[float] = field(default_factory=list)
+    # ---- per-request latency (modeled us; bounded reservoir) ----
+    latencies_us: Reservoir = field(
+        default_factory=lambda: Reservoir(cap=LATENCY_RESERVOIR_CAP))
+
+    def __post_init__(self):
+        # Accept a plain list at construction (test/legacy convenience).
+        if not isinstance(self.latencies_us, Reservoir):
+            self.latencies_us = Reservoir(cap=LATENCY_RESERVOIR_CAP,
+                                          items=self.latencies_us)
 
     # ------------------------------------------------------------------
     @property
@@ -89,6 +108,8 @@ class RuntimeTelemetry:
             "pf_late_ms": round(self.pf_late_ms, 3),
             "pf_unused": self.pf_unused,
             "pf_fetch_ms": round(self.pf_fetch_ms, 3),
+            "pf_channel_scheduled": self.pf_channel_scheduled,
+            "pf_eta_overwritten": self.pf_eta_overwritten,
             "rank_cancelled_evicted": self.rank_cancelled_evicted,
             "demand_fetch_ms": round(self.demand_fetch_ms, 3),
             "stall_ms": round(self.stall_ms, 3),
@@ -104,10 +125,43 @@ class RuntimeTelemetry:
         for f in ("batches", "requests", "pf_submitted", "pf_deduped",
                   "pf_cancelled_resident", "pf_issued", "pf_populate_calls",
                   "pf_timely", "pf_late", "pf_unused",
+                  "pf_channel_scheduled", "pf_eta_overwritten",
                   "rank_cancelled_evicted"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for f in ("pf_late_ms", "pf_fetch_ms", "demand_fetch_ms",
                   "stall_ms", "compute_ms"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
-        self.latencies_us.extend(other.latencies_us)
+        if isinstance(other.latencies_us, Reservoir):
+            self.latencies_us.merge(other.latencies_us)
+        else:
+            self.latencies_us.extend(other.latencies_us)
         return self
+
+    def publish(self, reg, prefix: str = "rt"):
+        """Publish into a :class:`repro.obs.MetricsRegistry` under the
+        ``rt.*`` namespace (see docs/architecture.md)."""
+        for key, val in (
+            ("batches", self.batches), ("requests", self.requests),
+            ("pf.submitted", self.pf_submitted),
+            ("pf.deduped", self.pf_deduped),
+            ("pf.cancelled_resident", self.pf_cancelled_resident),
+            ("pf.issued", self.pf_issued),
+            ("pf.populate_calls", self.pf_populate_calls),
+            ("pf.timely", self.pf_timely), ("pf.late", self.pf_late),
+            ("pf.late_ms", self.pf_late_ms),
+            ("pf.unused", self.pf_unused),
+            ("pf.fetch_ms", self.pf_fetch_ms),
+            ("pf.channel_scheduled", self.pf_channel_scheduled),
+            ("pf.eta_overwritten", self.pf_eta_overwritten),
+            ("rank_cancelled_evicted", self.rank_cancelled_evicted),
+            ("demand_fetch_ms", self.demand_fetch_ms),
+            ("stall_ms", self.stall_ms),
+            ("compute_ms", self.compute_ms),
+        ):
+            reg.counter(f"{prefix}.{key}").inc(val)
+        reg.gauge(f"{prefix}.hidden_ms").set(self.hidden_ms)
+        reg.gauge(f"{prefix}.stall_reduction").set(self.stall_reduction)
+        reg.gauge(f"{prefix}.pf.timeliness").set(self.pf_timeliness)
+        reg.histogram(f"{prefix}.req_latency_us",
+                      cap=self.latencies_us.cap).merge(self.latencies_us)
+        return reg

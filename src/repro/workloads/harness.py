@@ -30,6 +30,8 @@ import numpy as np
 
 from repro.core.recmg import frequency_outputs
 from repro.core.tiered import TieredEmbeddingStore
+from repro.obs import MetricsRegistry
+from repro.obs.tracing import get_tracer
 from repro.runtime.drift import AdaptiveController, DriftConfig
 from repro.workloads.spec import WorkloadSpec, iter_batches, make_trace
 
@@ -130,7 +132,10 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
     chunk_ptr = 0
     lat, batch_hit_rates = [], []
     empty = np.empty(0, np.int64)
+    tr = get_tracer()
     for b, ids in enumerate(iter_batches(spec, batch, trace=trace)):
+        if tr.enabled:
+            tr.set_batch(b)
         pre_hits = store.stats.hits
         t0 = time.perf_counter()
         store.lookup(ids)
@@ -181,6 +186,14 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
         res["learned"] = learned.telemetry()
     if controller is not None:
         res["drift"] = controller.as_dict()
+
+    # Same unified registry surface as ``serve_trace``: one namespace the
+    # reconciliation checker (and the scenario bench artifact) can read.
+    reg = MetricsRegistry()
+    store.publish_metrics(reg)
+    if controller is not None and hasattr(controller, "publish"):
+        controller.publish(reg)
+    res["metrics"] = reg.snapshot()
     return res
 
 

@@ -1,0 +1,351 @@
+"""Unified observability layer: typed metrics registry (merge additivity,
+snapshot round-trip, NaN-safe percentiles), deterministic span tracing
+(Chrome trace schema, monotone per-track spans, flight-recorder ring),
+and the counter-reconciliation checker — identities on hand-built books,
+violation detection, and the trace<->metrics cross-check on real runs.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (Histogram, MetricsRegistry, Reservoir, check_all,
+                       check_trace_vs_metrics, reconcile,
+                       validate_chrome_trace)
+from repro.obs.metrics import publish_all
+from repro.obs.reconcile import (check_pipeline, check_prefetch,
+                                 check_sharded, check_store)
+from repro.obs.tracing import (NullTracer, SpanTracer, get_tracer,
+                               install_tracer)
+
+
+# ---------------- metrics registry ----------------
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    reg.counter("store.fast.hits").inc(3)
+    reg.counter("store.fast.hits").inc(2)
+    reg.gauge("store.fast.hit_rate").set(0.6)
+    assert reg.value("store.fast.hits") == 5
+    assert reg.value("store.fast.hit_rate") == 0.6
+    assert "store.fast.hits" in reg
+    with pytest.raises(ValueError):
+        reg.counter("store.fast.hits").inc(-1)  # counters only go up
+    with pytest.raises(TypeError):
+        reg.gauge("store.fast.hits")  # name already bound to a Counter
+    with pytest.raises(ValueError):
+        reg.counter("Bad Name!")
+
+
+def test_registry_merge_is_additive():
+    """Merging the registries of two half-runs equals the whole run."""
+    whole, a, b = MetricsRegistry(), MetricsRegistry(), MetricsRegistry()
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=300)
+    for i, x in enumerate(xs):
+        dst = a if i < 150 else b
+        dst.counter("rt.requests").inc(1)
+        dst.histogram("rt.req_latency_us").append(float(x))
+        whole.counter("rt.requests").inc(1)
+        whole.histogram("rt.req_latency_us").append(float(x))
+    a.gauge("rt.pf.queued").set(7)
+    b.gauge("rt.pf.queued").set(3)
+    a.merge(b)
+    assert a.value("rt.requests") == whole.value("rt.requests") == 300
+    assert a.value("rt.pf.queued") == 3  # gauge: last writer wins
+    ha, hw = a.histogram("rt.req_latency_us"), whole.histogram(
+        "rt.req_latency_us")
+    assert ha.count == hw.count == 300
+    assert ha.total == pytest.approx(hw.total)
+    assert ha.mn == hw.mn and ha.mx == hw.mx
+
+
+def test_histogram_empty_percentiles_are_nan_safe():
+    h = Histogram("rt.req_latency_us")
+    d = h.as_dict()
+    assert d["count"] == 0
+    for k in ("p50", "p95", "p99", "min", "max"):
+        assert not np.isnan(d[k])  # empty sketch reports 0, never NaN
+    assert h.percentile(50) == 0.0
+    reg = MetricsRegistry()
+    reg.histogram("rt.req_latency_us")
+    flat = reg.as_dict()
+    assert flat["rt.req_latency_us.p50"] == 0.0
+
+
+def test_reservoir_bounded_and_list_compatible():
+    r = Reservoir(cap=64, seed=0)
+    r.extend(range(10_000))
+    assert len(r) == 10_000  # streaming count survives the bound
+    assert len(r.samples()) == 64  # retained memory stays fixed
+    assert r.mn == 0 and r.mx == 9999
+    assert r.total == sum(range(10_000))
+    # percentile of the uniform stream stays near truth with 64 samples
+    assert abs(r.percentile(50) - 5000) < 2500
+    small = Reservoir(cap=64, items=[1.0, 2.0, 3.0])
+    assert small == [1.0, 2.0, 3.0]  # under cap: exact, list-comparable
+    assert list(small) == [1.0, 2.0, 3.0]
+
+
+def test_snapshot_round_trip_exact():
+    reg = MetricsRegistry()
+    reg.counter("store.lookups").inc(1000)
+    reg.gauge("shard.0.imbalance").set(1.25)
+    reg.histogram("rt.req_latency_us", cap=32).extend(range(500))
+    snap = json.loads(json.dumps(reg.snapshot()))  # through real JSON
+    reg2 = MetricsRegistry.from_snapshot(snap)
+    assert reg2.as_dict() == reg.as_dict()
+    h = reg2.histogram("rt.req_latency_us")
+    assert h.count == 500 and h.total == sum(range(500))
+    assert h.mn == 0 and h.mx == 499  # exact past the retained samples
+
+
+def test_publish_all_skips_none():
+    class P:
+        def publish(self, reg):
+            reg.counter("x").inc(1)
+
+    reg = publish_all(MetricsRegistry(), P(), None, P())
+    assert reg.value("x") == 2
+
+
+# ---------------- reconciliation identities ----------------
+
+def _good_books():
+    return {
+        "store.batches": 10, "store.lookups": 100, "store.fast.hits": 60,
+        "store.fast.misses": 40, "store.fast.prefetch_hits": 15,
+        "store.fast.on_demand_rows": 30, "store.fast.evictions": 20,
+        "rt.pf.submitted": 50, "rt.pf.deduped": 5,
+        "rt.pf.cancelled_resident": 10, "rt.pf.issued": 30,
+        "rt.pf.queued": 5, "rt.pf.channel_scheduled": 30,
+        "rt.pf.timely": 12, "rt.pf.late": 8, "rt.pf.unused": 7,
+        "rt.pf.eta_overwritten": 2, "rt.pf.eta_pending": 1,
+        "rt.demand_fetch_ms": 40.0, "rt.stall_ms": 25.0,
+        "rt.hidden_ms": 15.0,
+    }
+
+
+def test_identities_hold_on_consistent_books():
+    assert check_all(_good_books()) == []
+
+
+@pytest.mark.parametrize("key,delta,expect", [
+    ("store.fast.hits", +1, "lookups"),          # hits+misses != lookups
+    ("store.fast.prefetch_hits", +50, "prefetch_hits"),
+    ("rt.pf.issued", -1, "submitted"),           # a prefetch id lost a fate
+    ("rt.pf.timely", +2, "channel_scheduled"),   # channel over-accounted
+    ("rt.stall_ms", +20.0, "stall_ms"),          # stall exceeds demand
+])
+def test_identity_violations_are_caught(key, delta, expect):
+    books = _good_books()
+    books[key] += delta
+    problems = check_all(books)
+    assert problems, f"perturbing {key} went unnoticed"
+    assert any(expect in p for p in problems)
+    with pytest.raises(AssertionError):
+        reconcile(metrics=books, strict=True)
+
+
+def test_sharded_aggregate_must_equal_sum():
+    books = {"store.lookups": 30, "store.fast.hits": 18,
+             "store.fast.misses": 12, "store.fast.prefetch_hits": 0,
+             "store.fast.on_demand_rows": 6, "store.fast.evictions": 4}
+    for s, (lk, h) in enumerate([(10, 6), (12, 7), (8, 5)]):
+        books[f"shard.{s}.store.lookups"] = lk
+        books[f"shard.{s}.store.fast.hits"] = h
+        books[f"shard.{s}.store.fast.misses"] = lk - h
+        books[f"shard.{s}.store.fast.prefetch_hits"] = 0
+        books[f"shard.{s}.store.fast.on_demand_rows"] = 2
+        books[f"shard.{s}.store.fast.evictions"] = s + 1
+    # consistent: evictions 1+2+3 == 6? no — aggregate says 4: violation
+    problems = check_sharded(books)
+    assert any("fast.evictions" in p for p in problems)
+    books["store.fast.evictions"] = 6
+    assert check_sharded(books) == []
+
+
+def test_vacuous_namespaces_pass():
+    """A surface that never ran simply contributes no identities."""
+    assert check_store({}) == []
+    assert check_prefetch({"store.lookups": 5}) == []
+    assert check_pipeline({}) == []
+
+
+# ---------------- span tracer ----------------
+
+def test_null_tracer_is_default_and_inert():
+    tr = get_tracer()
+    assert isinstance(tr, NullTracer) and not tr.enabled
+    tr.add_span("store", "lookup", 0.0, 1.0)  # must not raise
+    tr.set_batch(3)
+
+
+def test_tracer_export_schema_and_ring():
+    tr = SpanTracer(ring_batches=2)
+    for b in range(5):
+        tr.set_batch(b)
+        tr.add_span("store", "lookup", ts=b * 100.0, dur=50.0,
+                    track="store", args={"ids": 10})
+        tr.add_instant("pf", "demand", ts=b * 100.0 + 10, track="pf")
+    obj = tr.chrome_trace()
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    assert any(e["ph"] == "M" for e in evs)  # track-name metadata present
+    spans = [e for e in evs if e.get("ph") == "X"]
+    assert len(spans) == 5
+    assert all(e["args"]["batch"] == i for i, e in enumerate(spans))
+    # flight recorder keeps only the last ring_batches batches
+    ring = tr.flight_record()["traceEvents"]
+    batches = {e["args"]["batch"] for e in ring if e.get("ph") != "M"}
+    assert batches == {3, 4}
+
+
+def test_validator_flags_regressing_spans():
+    tr = SpanTracer()
+    tr.add_span("store", "lookup", ts=100.0, dur=50.0, track="store")
+    tr.add_span("store", "lookup", ts=10.0, dur=20.0, track="store")
+    problems = validate_chrome_trace(tr.chrome_trace())
+    assert any("regresses" in p for p in problems)
+    # ... but parallel tracks are independent timelines
+    tr2 = SpanTracer()
+    tr2.add_span("pf", "channel", ts=100.0, dur=50.0, track="pf-shard-0")
+    tr2.add_span("pf", "channel", ts=10.0, dur=20.0, track="pf-shard-1")
+    assert validate_chrome_trace(tr2.chrome_trace()) == []
+
+
+def test_install_tracer_round_trip():
+    tr = SpanTracer()
+    install_tracer(tr)
+    try:
+        assert get_tracer() is tr and get_tracer().enabled
+    finally:
+        install_tracer(None)
+    assert not get_tracer().enabled
+
+
+# ---------------- producers end to end ----------------
+
+def _zipf_ids(n_rows, n_acc, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.minimum(rng.zipf(1.2, size=n_acc), n_rows) - 1
+    return rng.permutation(n_rows)[ranks].astype(np.int64)
+
+
+def test_store_trace_reconciles_with_metrics():
+    """Per-batch lookup spans summed over the trace equal the TierStats
+    counters exactly — the tentpole's acceptance identity."""
+    from repro.core.tiered import TieredEmbeddingStore
+
+    host = np.random.default_rng(0).normal(size=(400, 8)).astype(np.float32)
+    ids = _zipf_ids(400, 1600)
+    tr = SpanTracer()
+    install_tracer(tr)
+    try:
+        store = TieredEmbeddingStore(host, 64, policy="lru")
+        for b in range(16):
+            tr.set_batch(b)
+            store.lookup(ids[b * 100: (b + 1) * 100])
+    finally:
+        install_tracer(None)
+    reg = store.publish_metrics(MetricsRegistry())
+    flat = reg.as_dict()
+    assert flat["store.fast.hits"] + flat["store.fast.misses"] \
+        == flat["store.lookups"] == 1600
+    trace = tr.chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    assert check_trace_vs_metrics(trace, flat) == []
+    assert reconcile(metrics=reg.snapshot(), trace=trace) == []
+
+
+def test_stats_publish_matches_merge_additivity():
+    """Publishing two split stats into one registry == publishing their
+    merge: the registry is additive exactly where TierStats.merge is."""
+    from repro.core.tiered import TieredEmbeddingStore
+
+    host = np.random.default_rng(0).normal(size=(300, 4)).astype(np.float32)
+    ids = _zipf_ids(300, 1200, seed=1)
+    a = TieredEmbeddingStore(host, 48, policy="lru")
+    b = TieredEmbeddingStore(host, 48, policy="lru")
+    a.lookup(ids[:600])
+    b.lookup(ids[600:])
+    split = MetricsRegistry()
+    a.stats.publish(split)
+    b.stats.publish(split)
+    merged_stats = a.stats.merge(b.stats)
+    whole = merged_stats.publish(MetricsRegistry())
+    for k in ("store.lookups", "store.fast.hits", "store.fast.misses",
+              "store.fast.evictions", "store.fast.on_demand_rows"):
+        assert split.value(k) == whole.value(k)
+
+
+def test_pipelined_runtime_reconciles():
+    """The full pipelined stack — store + prefetch engine + pipeline —
+    publishes one registry whose identities all close, and whose spans
+    cross-check against it."""
+    from repro.core.tiered import TieredEmbeddingStore
+    from repro.runtime import PipelinedRuntime, RuntimeConfig, VirtualClock
+
+    host = np.random.default_rng(0).normal(size=(400, 8)).astype(np.float32)
+    ids = _zipf_ids(400, 1200, seed=2)
+    clock = VirtualClock()
+    tr = SpanTracer(clock=clock)
+    install_tracer(tr)
+    try:
+        store = TieredEmbeddingStore(host, 64, policy="lru")
+        rt = PipelinedRuntime(store, RuntimeConfig(max_batch=64),
+                              clock=clock)
+        rt.run((ids[i * 100: (i + 1) * 100] for i in range(12)),
+               lambda b, emb: (0.0, []))
+    finally:
+        install_tracer(None)
+    reg = MetricsRegistry()
+    store.publish_metrics(reg)
+    rt.publish(reg)
+    flat = reg.as_dict()
+    assert flat["rt.requests"] == 12
+    assert flat["rt.req_latency_us.count"] == 12
+    trace = tr.chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    assert reconcile(metrics=reg.snapshot(), trace=trace) == []
+
+
+def test_sharded_replay_reconciles():
+    """Sharded serving: aggregate == sum of shards, per-shard namespaces
+    close, trace cross-check skips the span-count identity."""
+    from repro.workloads import parse_workload
+    from repro.workloads.harness import replay_scenario
+
+    tr = SpanTracer(ring_batches=4)
+    install_tracer(tr)
+    try:
+        res = replay_scenario(
+            parse_workload("zipf_hot:n_accesses=4096,n_tables=4,"
+                           "rows_per_table=256"),
+            policy="recmg", shards=3, batch=256)
+    finally:
+        install_tracer(None)
+    snap = res["metrics"]
+    flat = MetricsRegistry.from_snapshot(snap).as_dict()
+    assert flat["sharded.n_shards"] == 3
+    shard_lookups = sum(v for k, v in flat.items()
+                        if k.endswith(".store.lookups")
+                        and k.startswith("shard."))
+    assert shard_lookups == flat["store.lookups"]
+    trace = tr.chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    assert reconcile(metrics=snap, trace=trace) == []
+
+
+def test_telemetry_latency_reservoir_is_bounded():
+    from repro.runtime.telemetry import (LATENCY_RESERVOIR_CAP,
+                                         RuntimeTelemetry)
+
+    tel = RuntimeTelemetry()
+    for i in range(LATENCY_RESERVOIR_CAP + 5000):
+        tel.latencies_us.append(float(i))
+    assert len(tel.latencies_us) == LATENCY_RESERVOIR_CAP + 5000
+    assert len(tel.latencies_us.samples()) == LATENCY_RESERVOIR_CAP
+    other = RuntimeTelemetry(latencies_us=[1.0, 2.0])
+    merged = tel.merge(other)
+    assert len(merged.latencies_us) == LATENCY_RESERVOIR_CAP + 5002
