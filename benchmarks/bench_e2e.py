@@ -490,6 +490,40 @@ def learned_vs_voyager(ctx: BenchContext):
              f"worst over {list(names)}; perf-gate ceiling, hard cap 1.0")
 
 
+def overload_degradation(ctx: BenchContext):
+    """ROADMAP item 4: goodput under sustained overload.  Sweeps offered
+    load 0.5x -> 4x of modeled compute capacity through the SLO-aware
+    admission path on the VirtualClock (deterministic) and emits the
+    smooth-degradation figure of merit the perf gate floors: goodput at
+    4x must stay >= 0.7x of goodput at 1x — shedding and degraded
+    answers absorb the excess instead of collapsing the service."""
+    from repro.workloads import make_spec
+    from repro.workloads.overload import degradation_ratio, overload_sweep
+
+    n_acc = 24_000 if ctx.cfg.quick else 48_000
+    spec = make_spec("sustained_overload", n_accesses=n_acc, seed=0)
+    sweep = overload_sweep(loads=(0.5, 1.0, 2.0, 4.0), spec=spec,
+                           policy="lru", batch=32, per_query=8)
+    for x, r in sweep.items():
+        tag = f"{x:g}x"
+        ctx.emit("overload", f"goodput_rps_{tag}", r["goodput_rps"],
+                 f"served {r['served']} shed {r['shed']} "
+                 f"degraded {r['degraded']} of {r['admitted']}")
+        ctx.emit("overload", f"p999_ms_{tag}", r["p999_ms"],
+                 f"p99 {r['p99_ms']} ms; queue bound {r['queue_bound']}")
+    r4 = sweep[4.0]
+    ctx.emit("overload", "shed_4x", r4["shed"],
+             f"lowest-priority-first: gold {r4['gold_shed']} "
+             f"silver {r4['silver_shed']} bronze {r4['bronze_shed']}")
+    ctx.emit("overload", "degraded_4x", r4["degraded"],
+             f"stale rows {r4['degraded_rows_stale']} default rows "
+             f"{r4['degraded_rows_default']}; pf suppressed "
+             f"{r4['pf_suppressed']}")
+    ratio = degradation_ratio(sweep)
+    ctx.emit("overload", "overload_goodput_4x_vs_1x", round(ratio, 4),
+             "smooth-degradation gate: absolute floor 0.7 (no collapse)")
+
+
 def run(ctx: BenchContext):
     lookup_throughput(ctx)
     tracing_overhead(ctx)
@@ -501,3 +535,4 @@ def run(ctx: BenchContext):
     sharded_placements(ctx)
     scenario_matrix(ctx)
     learned_vs_voyager(ctx)
+    overload_degradation(ctx)

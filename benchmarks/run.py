@@ -15,10 +15,28 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import time
 from pathlib import Path
 
 from benchmarks.common import BenchConfig, BenchContext
+
+
+def write_trajectory_artifact(rows, args, out_dir: Path = Path("runs")):
+    """Write the per-PR ``BENCH_<n>.json`` trajectory artifact: the full
+    row list plus the invocation knobs, numbered one past the highest
+    ``BENCH_*.json`` already present (so a repo's run history reads as a
+    perf trajectory — ROADMAP item 5's first-class perf history).
+    Returns the path written."""
+    out_dir.mkdir(exist_ok=True)
+    pat = re.compile(r"^BENCH_(\d+)\.json$")
+    taken = [int(m.group(1)) for p in out_dir.glob("BENCH_*.json")
+             if (m := pat.match(p.name))]
+    n = max(taken, default=0) + 1
+    path = out_dir / f"BENCH_{n}.json"
+    path.write_text(json.dumps(
+        {"n": n, "args": vars(args), "rows": rows}, indent=2))
+    return path
 
 
 def main(argv=None) -> None:
@@ -56,6 +74,8 @@ def main(argv=None) -> None:
     Path("runs").mkdir(exist_ok=True)
     Path("runs/bench_results.json").write_text(json.dumps(ctx.rows, indent=2))
     print(f"# wrote runs/bench_results.json ({len(ctx.rows)} rows)")
+    traj = write_trajectory_artifact(ctx.rows, args)
+    print(f"# wrote {traj} (trajectory artifact)")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,8 @@ entry of a bench artifact) and optionally the matching Chrome trace
 * ``0 <= rt.stall_ms <= rt.demand_fetch_ms`` with ``stall + hidden ==
   demand_fetch``
 * sharded aggregate ``store.*`` == sum over ``shard.<i>.store.*``
+* admission fates: ``adm.admitted == served + shed + degraded``, both in
+  total and per priority class (``adm.class.<name>.*`` sums to totals)
 * trace cross-check: span args summed over the trace == the counters.
 
 Exit 1 on any violation.  ``--selftest`` serves a tiny traced scenario
@@ -73,7 +75,46 @@ def selftest() -> int:
     if not check_all(broken_pf):
         print("selftest: checker missed a prefetch-fate violation")
         return 1
-    print("selftest: traced scenario reconciles; violations are caught")
+
+    # Admission accounting (PR 8): the overload replay publishes the
+    # ``adm.*`` namespace and must reconcile (admitted == served + shed
+    # + degraded, totals and per class) on every serving surface —
+    # synchronous (depth=1), pipelined (depth=2), and sharded.
+    from repro.workloads import make_spec, replay_overload
+    spec = make_spec("sustained_overload", n_accesses=6000)
+    surfaces = [
+        ("sync", dict(pipeline_depth=1, prefetch=False)),
+        ("pipelined", dict(pipeline_depth=2)),
+        ("sharded", dict(shards=2)),
+    ]
+    for name, kw in surfaces:
+        res = replay_overload(spec, load_x=4.0, **kw)  # check=True reconciles
+        flat = res["metrics"]["counters"]  # registry snapshot form
+        if flat.get("adm.admitted", 0) <= 0:
+            print(f"selftest: overload/{name} published no adm.admitted")
+            return 1
+        if flat["adm.admitted"] != (flat["adm.served"] + flat["adm.shed"]
+                                    + flat["adm.degraded"]):
+            print(f"selftest: overload/{name} admission identity broken")
+            return 1
+
+    # And the checker must catch cooked admission books: a shed request
+    # that vanished from the fate sum, and a per-class sum that drifts
+    # from the total.
+    broken_adm = {"adm.admitted": 100, "adm.served": 80, "adm.shed": 10,
+                  "adm.degraded": 5}
+    if not check_all(broken_adm):
+        print("selftest: checker missed an admission-fate violation")
+        return 1
+    broken_cls = {"adm.admitted": 10, "adm.served": 10, "adm.shed": 0,
+                  "adm.degraded": 0,
+                  "adm.class.gold.admitted": 6, "adm.class.gold.served": 6,
+                  "adm.class.gold.shed": 0, "adm.class.gold.degraded": 0}
+    if not check_all(broken_cls):
+        print("selftest: checker missed a per-class vs total drift")
+        return 1
+    print("selftest: traced scenario + overload surfaces reconcile; "
+          "violations are caught")
     return 0
 
 

@@ -39,6 +39,15 @@ One guards the observability layer (bench ``obs``):
   path; the tracing-*off* cost is already guarded by the two hot-path
   gates above, which run with tracing off).
 
+One guards overload behavior (bench ``overload``; counter-derived,
+deterministic on the VirtualClock):
+
+* ``overload_goodput_4x_vs_1x`` — goodput (full-quality served requests
+  per modeled second) at 4x offered load relative to 1x, through the
+  SLO-aware admission path; a floor metric with an *absolute floor of
+  0.7* (graceful degradation means shedding and degraded answers absorb
+  the excess — goodput must not collapse as load quadruples).
+
 A metric regresses when it moves more than ``tolerance`` (default 30%)
 past its baseline in the bad direction.  Exit 1 on any regression —
 wired into the CI bench-smoke lane after the bench_e2e smoke.
@@ -73,17 +82,24 @@ def main(argv=None) -> int:
 
     failures = []
 
-    def check_floor(key, name):
+    def check_floor(key, name, floor=None):
+        """Floor metric; ``floor`` is an optional *absolute* bound that
+        tightens the tolerance-derived floor (for ratios with a hard
+        semantic threshold — e.g. "no congestion collapse" means goodput
+        at 4x must stay >= 0.7x of 1x no matter how generous the
+        tolerance)."""
         want = base.get(name)
         got = results.get(key)
         if want is None or got is None:
             print(f"SKIP {name}: baseline={want} measured={got}")
             return
-        floor = want * (1.0 - tol)
-        status = "OK" if got >= floor else "REGRESSION"
-        print(f"{status} {name}: measured {got:g} vs floor {floor:g} "
+        lo = want * (1.0 - tol)
+        if floor is not None:
+            lo = max(lo, floor)
+        status = "OK" if got >= lo else "REGRESSION"
+        print(f"{status} {name}: measured {got:g} vs floor {lo:g} "
               f"(baseline {want}, tolerance {tol:.0%})")
-        if got < floor:
+        if got < lo:
             failures.append(name)
 
     def check_ceiling(key, name, cap=None):
@@ -115,6 +131,8 @@ def main(argv=None) -> int:
                   "recmg_vs_voyager_on_demand_ratio", cap=1.0)
     check_ceiling(("obs", "tracing_on_lookup_slowdown"),
                   "tracing_on_lookup_slowdown")
+    check_floor(("overload", "overload_goodput_4x_vs_1x"),
+                "overload_goodput_4x_vs_1x", floor=0.7)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)

@@ -130,6 +130,20 @@ class MultiTableTieredStore:
             mask[m] = self.stores[t].resident_mask(local[m])
         return mask
 
+    def lookup_resident(self, global_ids: np.ndarray):
+        """Degraded read (single-store API parity): ``(rows, n_default)``
+        — stale-but-resident rows per table, zero default for misses; no
+        stats mutation and no slow-tier traffic on any sub-store."""
+        gid, table, local = self._route(global_ids)
+        out = np.zeros((len(gid), self.emb_dim), self.out_dtype)
+        n_default = 0
+        for t in np.unique(table).tolist():
+            m = table == t
+            rows, nd = self.stores[t].lookup_resident(local[m])
+            out[m] = rows.astype(self.out_dtype, copy=False)
+            n_default += nd
+        return out, n_default
+
     # ---------------- single-store-compatible API ----------------
 
     def lookup(self, global_ids: np.ndarray) -> jnp.ndarray:

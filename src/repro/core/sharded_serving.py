@@ -180,6 +180,22 @@ class ShardedTieredStore:
             mask[m] = self.stores[s].resident_mask(local[m])
         return mask
 
+    def lookup_resident(self, global_ids: np.ndarray):
+        """Degraded read (single-store API parity): ``(rows, n_default)``
+        routed shard-locally — stale-but-resident rows, zero default for
+        misses; no stats mutation, no slow-tier traffic, and no load/
+        imbalance accounting (this is the answer a shard gives when it is
+        *not* allowed to do work)."""
+        gid, shard, local = self.plan.route(global_ids)
+        out = np.zeros((len(gid), self.emb_dim), self.out_dtype)
+        n_default = 0
+        for s in np.unique(shard).tolist():
+            m = shard == s
+            rows, nd = self.stores[s].lookup_resident(local[m])
+            out[m] = rows.astype(self.out_dtype, copy=False)
+            n_default += nd
+        return out, n_default
+
     def _route_outputs(self, trunk, bits, prefetch_ids, staged: bool):
         trunk, t_shard, t_loc = self.plan.route(trunk)
         bits = np.asarray(bits).ravel()[: len(trunk)]  # zip truncation

@@ -271,6 +271,27 @@ class TieredEmbeddingStore:
         before-issue and for tests; does not touch recency state)."""
         return self._slot_map[np.asarray(ids, np.int64).ravel()] >= 0
 
+    def lookup_resident(self, ids: np.ndarray):
+        """Degraded read for over-deadline requests: ``(rows, n_default)``
+        where resident ids get their current (possibly stale) fast-tier
+        row and slow-tier misses get a zero default row — never a wrong
+        shape, never a slow-tier fetch.  Pure read: no recency update, no
+        admission/eviction, no stats mutation, so the main accounting
+        identities are untouched."""
+        ids = np.asarray(ids, np.int64).ravel()
+        out = np.zeros((ids.size, self.host.shape[1]), self._out_np_dtype)
+        slots = self._slot_map[ids]
+        res = slots >= 0
+        n_res = int(np.count_nonzero(res))
+        if n_res:
+            s = slots[res].astype(np.int64)
+            rows = np.asarray(self.buffer)[s]
+            if self.quantize:
+                rows = rows.astype(np.float32) \
+                    * np.asarray(self.scales)[s][:, None]
+            out[res] = rows.astype(self._out_np_dtype, copy=False)
+        return out, int(ids.size) - n_res
+
     def check_invariants(self):
         """Residency invariants (used by tests): the slot map and slot->key
         array are exact inverses, the free stack covers the rest, and under

@@ -38,7 +38,9 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
                 async_prefetch: bool = False, pipeline_depth: int = 2,
                 scheduler: str = "inline", interarrival_us: float = 0.0,
                 compute_us: Optional[float] = None, adapt: bool = False,
-                adapt_cfg=None, model=None, log=None) -> Dict:
+                adapt_cfg=None, model=None, overload: float = 0.0,
+                priority_mix=None, queue_bound: int = 0,
+                log=None) -> Dict:
     """Replay a trace as DLRM inference batches through the tiered store.
 
     ``multi_table=True`` serves through the per-table facade (one batched
@@ -76,7 +78,17 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     ``outputs``; with ``adapt=True`` the drift controller then also
     fine-tunes the model online on every refresh and swaps in recomputed
     outputs (:class:`~repro.core.model_runtime.LearnedController`) — on
-    both the synchronous and the pipelined (``VirtualClock``) path."""
+    both the synchronous and the pipelined (``VirtualClock``) path.
+
+    ``overload > 0`` (requires ``async_prefetch``) serves through the
+    SLO-aware admission path (:mod:`repro.runtime.admission`): requests
+    arrive open-loop at ``overload`` times the modeled compute capacity
+    with priorities drawn from ``priority_mix`` (a weight per class,
+    most-important first), the queue is bounded at ``queue_bound``
+    (default 4 batches) with lowest-priority-first shedding, EDF batch
+    scheduling, deadline-driven degraded answers and prefetch
+    backpressure.  The result gains ``admission`` /  ``goodput_rps``
+    keys and the ``adm.*`` metrics namespace."""
     T, P = cfg.n_tables, cfg.multi_hot
     per_batch = batch_queries * T * P
     host_rows = int(trace.rows_per_table.sum())
@@ -164,7 +176,16 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         return items
 
     def forward_batch(emb):
-        """Pool + dense forward; returns measured compute seconds."""
+        """Pool + dense forward; returns measured compute seconds.
+        Partial batches (EDF pops under admission control can close a
+        batch below ``max_batch``) are zero-padded to the full shape so
+        the jitted forward sees one shape — no per-size XLA recompiles
+        on the measured path."""
+        rows = batch_queries * T * P
+        if emb.shape[0] < rows:
+            emb = jnp.concatenate(
+                [emb, jnp.zeros((rows - emb.shape[0], emb.shape[1]),
+                                emb.dtype)])
         emb = emb.reshape(batch_queries, T, P, cfg.emb_dim).sum(axis=2)
         dense = jnp.asarray(
             rng.normal(size=(batch_queries, cfg.dense_features))
@@ -185,8 +206,25 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     jax.block_until_ready(fwd(params, warm_dense, warm_pooled))
 
     rt = None
+    adm_cfg = None
+    if overload and not async_prefetch:
+        raise ValueError("--overload requires --async-prefetch (the "
+                         "admission path lives in the pipelined runtime)")
     if async_prefetch:
-        from repro.runtime import PipelinedRuntime, RuntimeConfig
+        from repro.runtime import (AdmissionConfig, PipelinedRuntime,
+                                   RuntimeConfig)
+
+        if overload:
+            # Offered load as a multiple of modeled compute capacity:
+            # one batch per compute_us -> interarrival pins the rate.
+            if compute_us is None:
+                compute_us = 500.0
+            interarrival_us = compute_us / (batch_queries * float(overload))
+            adm_cfg = AdmissionConfig(
+                queue_bound=int(queue_bound) if queue_bound
+                else 4 * batch_queries,
+                class_deadline_us=(4 * compute_us, 16 * compute_us,
+                                   64 * compute_us))
 
         # ``compute_us`` pins the modeled device time per batch (so the
         # overlap window uses one cost model for both fetch and compute);
@@ -201,7 +239,8 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
         rt = PipelinedRuntime(store, RuntimeConfig(
             max_batch=batch_queries, pipeline_depth=pipeline_depth,
             interarrival_us=interarrival_us, scheduler=scheduler,
-            fetch_us_per_row=fetch_us_per_row, compute_us=compute_us),
+            fetch_us_per_row=fetch_us_per_row, compute_us=compute_us,
+            admission=adm_cfg),
             clock=rt_clock,
             batch_hook=controller.on_batch if controller else None)
 
@@ -213,8 +252,23 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
             return c, staged_for_batch(b)
 
         qp = T * P  # ids per query = one request
-        rt.run((gid[i * qp: (i + 1) * qp]
-                for i in range(n_batches * batch_queries)), step)
+        n_queries = n_batches * batch_queries
+        if adm_cfg is not None:
+            mix = np.asarray(priority_mix if priority_mix is not None
+                             else (0.2, 0.3, 0.5), np.float64)
+            if mix.size != adm_cfg.n_classes or mix.min() < 0 \
+                    or mix.sum() <= 0:
+                raise ValueError(f"priority_mix needs {adm_cfg.n_classes} "
+                                 f"non-negative weights, got "
+                                 f"{priority_mix!r}")
+            pri = np.random.default_rng(2).choice(
+                adm_cfg.n_classes, size=n_queries, p=mix / mix.sum())
+            stream = ((gid[i * qp: (i + 1) * qp], int(pri[i]))
+                      for i in range(n_queries))
+        else:
+            stream = (gid[i * qp: (i + 1) * qp]
+                      for i in range(n_queries))
+        rt.run(stream, step)
         lat = rt.wall_batch_s
     else:
         lat = []
@@ -272,6 +326,12 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
             / max(store.stats.prefetch_hits + store.stats.on_demand_rows, 1),
             4)
         st["runtime"] = rt.results()
+        if rt.admission_stats is not None:
+            adm = rt.admission_stats
+            modeled_s = max(rt.clock.now() * 1e-6, 1e-12)
+            st["admission"] = adm.as_dict(adm_cfg)
+            st["goodput_rps"] = round(adm.total_served / modeled_s, 3)
+            st["offered_rps"] = round(1e6 / interarrival_us, 3)
     else:
         # Synchronous serving: every on-demand fetch sits on the critical
         # path, so the stall is the whole modeled slow-tier cost.
@@ -352,6 +412,21 @@ def main(argv=None):
                     choices=["inline", "thread"],
                     help="prefetch-engine scheduler: inline is "
                          "deterministic, thread overlaps wall-clock")
+    ap.add_argument("--overload", type=float, default=0.0,
+                    help="serve open-loop at this multiple of modeled "
+                         "compute capacity through the SLO-aware admission "
+                         "path (EDF scheduling, bounded queue with "
+                         "lowest-priority-first shedding, degraded answers "
+                         "past deadline, prefetch backpressure); implies "
+                         "--async-prefetch")
+    ap.add_argument("--priority-mix", default="",
+                    help="comma-separated traffic weights per priority "
+                         "class, most-important first (default 0.2,0.3,0.5 "
+                         "over gold,silver,bronze)")
+    ap.add_argument("--queue-bound", type=int, default=0,
+                    help="admission-queue bound in requests (default: 4 "
+                         "batches); the excess is shed "
+                         "lowest-priority-first")
     ap.add_argument("--workload", default="",
                     help="serve a named workload scenario instead of the "
                          "default calibrated trace: a catalog name "
@@ -376,6 +451,8 @@ def main(argv=None):
     ap.add_argument("--trace-ring", type=int, default=64,
                     help="flight-recorder ring size in batches")
     args = ap.parse_args(argv)
+    if args.overload:
+        args.async_prefetch = True
 
     cfg = get_config("dlrm-recmg").reduced()
     params = init_dlrm(jax.random.PRNGKey(0), cfg)
@@ -450,7 +527,12 @@ def main(argv=None):
                           async_prefetch=args.async_prefetch,
                           pipeline_depth=args.pipeline_depth,
                           scheduler=args.scheduler, adapt=args.adapt,
-                          model=model_rt, log=print)
+                          model=model_rt, overload=args.overload,
+                          priority_mix=tuple(
+                              float(w) for w in
+                              args.priority_mix.split(","))
+                          if args.priority_mix else None,
+                          queue_bound=args.queue_bound, log=print)
     finally:
         if tracer is not None:
             install_tracer(None)

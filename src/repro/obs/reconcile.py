@@ -16,8 +16,9 @@ Identities (see docs/architecture.md for the derivations):
 
 * **store**:   ``fast.hits + fast.misses == lookups``  (request level),
   ``fast.prefetch_hits <= fast.hits``;
-* **prefetch fate**:  ``pf.submitted == pf.deduped + pf.cancelled_resident
-  + pf.issued + pf.queued``  (queued == still staged at snapshot time);
+* **prefetch fate**:  ``pf.submitted == pf.suppressed + pf.deduped
+  + pf.cancelled_resident + pf.issued + pf.queued``  (queued == still
+  staged at snapshot time; suppressed == dropped under backpressure);
 * **prefetch timeliness**:  ``pf.channel_scheduled == pf.timely + pf.late
   + pf.unused + pf.eta_overwritten + pf.eta_pending``  (every id put on
   the modeled channel is eventually demanded timely/late, never demanded,
@@ -25,6 +26,9 @@ Identities (see docs/architecture.md for the derivations):
 * **pipeline**:  ``stall_ms + hidden_ms == demand_fetch_ms`` with both
   parts non-negative (hidden is defined as the difference, so the
   substantive check is ``0 <= stall <= demand_fetch``);
+* **admission**:  ``adm.admitted == adm.served + adm.shed + adm.degraded``
+  (every request has exactly one fate), and each ``adm.class.<name>.*``
+  sub-namespace both closes the same identity and sums to the totals;
 * **sharded**:  aggregate ``store.*`` == sum over ``shard.<i>.store.*``.
 
 The trace cross-check (:func:`check_trace_vs_metrics`) closes the loop
@@ -77,13 +81,14 @@ def check_prefetch(flat: Mapping[str, Any], prefix: str = "rt") -> List[str]:
         return []
     p: List[str] = []
     sub = _get(flat, f"{prefix}.pf.submitted")
-    fate = (_get(flat, f"{prefix}.pf.deduped")
+    fate = (_get(flat, f"{prefix}.pf.suppressed")
+            + _get(flat, f"{prefix}.pf.deduped")
             + _get(flat, f"{prefix}.pf.cancelled_resident")
             + _get(flat, f"{prefix}.pf.issued")
             + _get(flat, f"{prefix}.pf.queued"))
     if abs(sub - fate) > _EPS:
-        p.append(f"{prefix}: pf.submitted({sub:g}) != deduped + "
-                 f"cancelled_resident + issued + queued ({fate:g})")
+        p.append(f"{prefix}: pf.submitted({sub:g}) != suppressed + deduped "
+                 f"+ cancelled_resident + issued + queued ({fate:g})")
     sched = _get(flat, f"{prefix}.pf.channel_scheduled")
     acct = (_get(flat, f"{prefix}.pf.timely")
             + _get(flat, f"{prefix}.pf.late")
@@ -115,6 +120,41 @@ def check_pipeline(flat: Mapping[str, Any], prefix: str = "rt") -> List[str]:
     return p
 
 
+def check_admission(flat: Mapping[str, Any],
+                    prefix: str = "adm") -> List[str]:
+    """Every admitted request has exactly one fate — served in full,
+    shed, or answered degraded — and the per-class sub-namespaces must
+    sum to the totals (``adm.class.<name>.* -> adm.*``)."""
+    if not _has_any(flat, prefix):
+        return []
+    p: List[str] = []
+    fates = ("admitted", "served", "shed", "degraded")
+    adm, srv, shd, deg = (_get(flat, f"{prefix}.{f}") for f in fates)
+    if abs(adm - (srv + shd + deg)) > _EPS:
+        p.append(f"{prefix}: admitted({adm:g}) != served({srv:g}) + "
+                 f"shed({shd:g}) + degraded({deg:g})")
+    for f in fates + ("degraded_rows_stale", "degraded_rows_default"):
+        if _get(flat, f"{prefix}.{f}") < -_EPS:
+            p.append(f"{prefix}.{f} is negative")
+    cls_re = re.compile(rf"^{re.escape(prefix)}\.class\.([^.]+)\.")
+    classes = sorted({m.group(1) for k in flat if (m := cls_re.match(k))})
+    for f in fates:
+        total = _get(flat, f"{prefix}.{f}")
+        by_class = sum(_get(flat, f"{prefix}.class.{c}.{f}")
+                       for c in classes)
+        if classes and abs(total - by_class) > _EPS:
+            p.append(f"{prefix}: {f}({total:g}) != sum over classes "
+                     f"({by_class:g})")
+    for c in classes:
+        ca = _get(flat, f"{prefix}.class.{c}.admitted")
+        cf = sum(_get(flat, f"{prefix}.class.{c}.{f}")
+                 for f in ("served", "shed", "degraded"))
+        if abs(ca - cf) > _EPS:
+            p.append(f"{prefix}.class.{c}: admitted({ca:g}) != "
+                     f"served + shed + degraded ({cf:g})")
+    return p
+
+
 _SHARD_RE = re.compile(r"^shard\.(\d+)\.")
 
 
@@ -142,7 +182,8 @@ def check_sharded(flat: Mapping[str, Any]) -> List[str]:
 def check_all(flat: Mapping[str, Any]) -> List[str]:
     """All identities over one flat metrics mapping; empty == reconciled."""
     return (check_store(flat) + check_prefetch(flat)
-            + check_pipeline(flat) + check_sharded(flat))
+            + check_pipeline(flat) + check_admission(flat)
+            + check_sharded(flat))
 
 
 # ---------------- trace <-> metrics cross-check ----------------

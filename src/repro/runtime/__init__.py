@@ -1,6 +1,9 @@
 """Asynchronous pipelined serving runtime (background prefetch engine,
-micro-batching request pipeline, telemetry).  See docs/architecture.md
-("Serving runtime") for the determinism contract."""
+micro-batching request pipeline, SLO-aware admission control, telemetry).
+See docs/architecture.md ("Serving runtime" and "Admission control &
+overload behavior") for the determinism contract."""
+from repro.runtime.admission import (PRIORITY_CLASSES, AdmissionConfig,
+                                     AdmissionQueue, AdmissionStats)
 from repro.runtime.clock import Clock, VirtualClock, WallClock
 from repro.runtime.drift import (AdaptiveController, DriftConfig,
                                  DriftDetector)
@@ -11,6 +14,8 @@ from repro.runtime.prefetch_engine import (PrefetchEngine,
 from repro.runtime.telemetry import RuntimeTelemetry, latency_percentiles
 
 __all__ = [
+    "PRIORITY_CLASSES", "AdmissionConfig", "AdmissionQueue",
+    "AdmissionStats",
     "Clock", "VirtualClock", "WallClock",
     "AdaptiveController", "DriftConfig", "DriftDetector",
     "MicroBatcher", "PipelinedRuntime", "Request", "RuntimeConfig",

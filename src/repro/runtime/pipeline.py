@@ -30,13 +30,17 @@ critical path.  Only the accounting changes, never the residency math.
 """
 from __future__ import annotations
 
+import math
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.obs.tracing import get_tracer
+from repro.runtime.admission import (AdmissionConfig, AdmissionQueue,
+                                     AdmissionStats)
 from repro.runtime.clock import Clock, VirtualClock
 from repro.runtime.prefetch_engine import PrefetchEngine
 from repro.runtime.telemetry import RuntimeTelemetry
@@ -44,11 +48,19 @@ from repro.runtime.telemetry import RuntimeTelemetry
 
 @dataclass
 class Request:
-    """One inference query's embedding-id vector."""
+    """One inference query's embedding-id vector.
+
+    ``priority`` / ``deadline_us`` only matter on the admission-control
+    path (``RuntimeConfig.admission``): class index 0 is the most
+    important, and the deadline is *absolute* modeled time (arrival plus
+    the class latency budget).  The defaults keep the plain micro-batched
+    path byte-identical to before."""
 
     rid: int
     ids: np.ndarray
     arrival_us: float = 0.0
+    priority: int = 0
+    deadline_us: float = float("inf")
 
 
 @dataclass
@@ -63,10 +75,26 @@ class RuntimeConfig:
     scheduler: str = "inline"        # "inline" (deterministic) | "thread"
     max_queue: int = 64              # prefetch work-queue bound
     coalesce_rows: int = 4096        # populate coalescing cap
+    admission: Optional[AdmissionConfig] = None  # overload-control path
 
     def __post_init__(self):
         if self.pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        # NaN comparisons are all False, so a NaN deadline would make
+        # MicroBatcher.ready() silently never fire — reject it here with
+        # the other nonsensical timing values.  inf deadline (size-only
+        # batching) stays legal.
+        if math.isnan(self.deadline_us) or self.deadline_us < 0:
+            raise ValueError(
+                f"deadline_us must be >= 0 (inf ok), got {self.deadline_us}")
+        if math.isnan(self.interarrival_us) or self.interarrival_us < 0 \
+                or math.isinf(self.interarrival_us):
+            raise ValueError("interarrival_us must be finite and >= 0, "
+                             f"got {self.interarrival_us}")
 
 
 class MicroBatcher:
@@ -75,8 +103,12 @@ class MicroBatcher:
     def __init__(self, max_batch: int, deadline_us: float = float("inf")):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        deadline_us = float(deadline_us)
+        if math.isnan(deadline_us) or deadline_us < 0:
+            raise ValueError(
+                f"deadline_us must be >= 0 (inf ok), got {deadline_us}")
         self.max_batch = int(max_batch)
-        self.deadline_us = float(deadline_us)
+        self.deadline_us = deadline_us
         self._queue: List[Request] = []
 
     def __len__(self):
@@ -99,19 +131,31 @@ class MicroBatcher:
     def pop(self) -> Tuple[List[Request], float]:
         """Close one batch; returns (requests, close time).  A full batch
         closes when its last member arrived; a deadline batch when the
-        oldest request's patience ran out."""
+        oldest request's patience ran out.  With ``deadline_us=inf`` a
+        partial batch can only be popped by an explicit caller decision,
+        so its close time clamps to the last arrival — an infinite close
+        time would poison every latency percentile downstream."""
         take, self._queue = (self._queue[: self.max_batch],
                              self._queue[self.max_batch:])
+        if not take:
+            raise ValueError("pop on empty micro-batcher queue")
+        last_arrival = max(r.arrival_us for r in take)
         if len(take) == self.max_batch:
-            close = max(r.arrival_us for r in take)
+            close = last_arrival
         else:
             close = take[0].arrival_us + self.deadline_us
+            if not math.isfinite(close):
+                close = last_arrival
         return take, close
 
-    def flush(self) -> Tuple[List[Request], float]:
-        """End-of-stream: close whatever is waiting at its last arrival."""
+    def flush(self, now_us: float = 0.0) -> Tuple[List[Request], float]:
+        """End-of-stream: close whatever is waiting at its last arrival.
+        An empty queue flushes to ``([], now_us)`` instead of raising —
+        overload runs legitimately drain to empty before end-of-stream."""
         take, self._queue = self._queue[: self.max_batch], \
             self._queue[self.max_batch:]
+        if not take:
+            return [], float(now_us)
         return take, max(r.arrival_us for r in take)
 
 
@@ -144,6 +188,15 @@ class PipelinedRuntime:
             fetch_us_per_row=self.cfg.fetch_us_per_row,
             fetch_us_fixed=self.cfg.fetch_us_fixed)
         self.batcher = MicroBatcher(self.cfg.max_batch, self.cfg.deadline_us)
+        # ---- admission-control state (None on the plain path) ----
+        self.admission_stats: Optional[AdmissionStats] = None
+        self._adm_queue: Optional[AdmissionQueue] = None
+        self._bp_on = False
+        if self.cfg.admission is not None:
+            self.admission_stats = AdmissionStats(
+                n_classes=self.cfg.admission.n_classes)
+            self._adm_queue = AdmissionQueue(self.cfg.admission,
+                                             self.admission_stats)
         # ---- modeled timeline state ----
         self._host_free_us = 0.0
         self._compute_done_us: List[float] = []   # per finished batch
@@ -158,10 +211,18 @@ class PipelinedRuntime:
             return self._next_rid * self.cfg.interarrival_us
         return 0.0  # closed loop: latency measured from admission
 
-    def submit(self, ids: np.ndarray) -> Request:
+    def _make_request(self, ids: np.ndarray, priority: int = 0) -> Request:
+        arrival = self._arrival()
+        deadline = float("inf")
+        if self.cfg.admission is not None:
+            deadline = self.cfg.admission.deadline_for(priority, arrival)
         req = Request(self._next_rid, np.asarray(ids, np.int64).ravel(),
-                      self._arrival())
+                      arrival, priority=priority, deadline_us=deadline)
         self._next_rid += 1
+        return req
+
+    def submit(self, ids: np.ndarray, priority: int = 0) -> Request:
+        req = self._make_request(ids, priority)
         self.batcher.push(req)
         return req
 
@@ -175,7 +236,15 @@ class PipelinedRuntime:
         runs the dense forward for one closed batch and returns its
         measured compute time plus the list of ``(trunk, bits,
         prefetch_ids)`` model outputs to stage for later batches.
+
+        With ``cfg.admission`` set, stream items may also be
+        ``(ids, priority)`` pairs and dispatch goes through the bounded
+        EDF admission queue (:meth:`_run_admission`) instead of the
+        FIFO micro-batcher; the plain path below is byte-identical to
+        the pre-admission runtime.
         """
+        if self.cfg.admission is not None:
+            return self._run_admission(id_stream, step_fn)
         for ids in id_stream:
             arrival = self._arrival()
             # A waiting partial batch whose deadline expires before this
@@ -193,6 +262,100 @@ class PipelinedRuntime:
         self.engine.close()
         return self.telemetry
 
+    # ---------------- admission-control dispatch ----------------
+
+    def _server_free_us(self) -> float:
+        """Earliest modeled time the host can start the next batch (the
+        same lower bound :meth:`_process` computes as ``max(host_free,
+        gate)`` — close time is then the dispatch decision on top)."""
+        b, done = self._batch_index, self._compute_done_us
+        gate = done[b - self.cfg.pipeline_depth] \
+            if b >= self.cfg.pipeline_depth else 0.0
+        return max(self._host_free_us, gate)
+
+    def _update_backpressure(self):
+        """Queue-occupancy hysteresis driving the prefetch engine's
+        issue-suppression signal (on above hi, off below lo — no
+        flapping when occupancy hovers at one threshold)."""
+        adm = self.cfg.admission
+        occ = self._adm_queue.occupancy
+        if not self._bp_on and occ >= adm.backpressure_hi:
+            self._bp_on = True
+            self.engine.set_backpressure(True)
+        elif self._bp_on and occ <= adm.backpressure_lo:
+            self._bp_on = False
+            self.engine.set_backpressure(False)
+
+    def _run_admission(self, id_stream, step_fn):
+        """Overload-aware dispatch: arrivals flow through the bounded
+        :class:`AdmissionQueue`; whenever the modeled server is free and
+        work is queued, a batch closes in EDF order.  The server is
+        work-conserving — under light load batches run partial, under
+        overload the queue saturates, excess is shed lowest-priority-
+        first, and over-deadline requests take the degraded path inside
+        :meth:`_process`.  Fully deterministic on the VirtualClock."""
+        aq, cfg = self._adm_queue, self.cfg
+        pending = deque()
+        for item in id_stream:
+            if isinstance(item, tuple):
+                ids, pri = item
+            else:
+                ids, pri = item, 0
+            pending.append(self._make_request(ids, int(pri)))
+        while pending or len(aq):
+            t_free = self._server_free_us()
+            # Admit everything that arrived while the server was busy, in
+            # arrival order — shedding decisions happen at arrival time.
+            while pending and pending[0].arrival_us <= t_free:
+                aq.offer(pending.popleft())
+                self._update_backpressure()
+            if not len(aq):
+                # Idle server: wait for (and admit) the next arrival.
+                aq.offer(pending.popleft())
+                self._update_backpressure()
+                continue
+            reqs = aq.pop(cfg.max_batch)
+            self._update_backpressure()
+            close = max(t_free, max(r.arrival_us for r in reqs))
+            self._process(reqs, close, step_fn)
+        self.engine.close()
+        self.admission_stats.check()
+        return self.telemetry
+
+    def _split_degraded(self, reqs: List[Request], host_start: float):
+        """Partition a closing batch into live requests (full-quality
+        lookup) and over-deadline requests (degraded answer)."""
+        adm = self.cfg.admission
+        if adm is None or not adm.degrade:
+            return reqs, []
+        live = [r for r in reqs if r.deadline_us >= host_start]
+        deg = [r for r in reqs if r.deadline_us < host_start]
+        return live, deg
+
+    def _assemble_degraded(self, reqs, live, degraded, emb_live):
+        """Reassemble a batch's embedding matrix in request order when
+        some requests took the degraded path: live rows come from the
+        full lookup, degraded rows from residency-only reads (stale rows
+        for what happens to be in the fast tier, a zero default row per
+        slow-tier miss) — the answer always has the full batch shape."""
+        deg_ids = np.concatenate([r.ids for r in degraded])
+        deg_rows, n_default = self.store.lookup_resident(deg_ids)
+        st = self.admission_stats
+        st.degraded_rows_default += n_default
+        st.degraded_rows_stale += int(deg_ids.size) - n_default
+        live_rows = np.asarray(emb_live) if live else None
+        deg_set = {r.rid for r in degraded}
+        parts, li, di = [], 0, 0
+        for r in reqs:
+            n = int(r.ids.size)
+            if r.rid in deg_set:
+                parts.append(deg_rows[di: di + n])
+                di += n
+            else:
+                parts.append(live_rows[li: li + n])
+                li += n
+        return np.concatenate(parts) if parts else deg_rows
+
     def _process(self, reqs: List[Request], close_us: float, step_fn):
         cfg, tel = self.cfg, self.telemetry
         b = self._batch_index
@@ -208,7 +371,11 @@ class PipelinedRuntime:
         host_start = max(self._host_free_us, close_us, gate)
 
         ids = np.concatenate([r.ids for r in reqs])
-        self.engine.observe_demand(np.unique(ids), host_start)
+        live, degraded = self._split_degraded(reqs, host_start)
+        live_ids = np.concatenate([r.ids for r in live]) if live \
+            else np.empty(0, np.int64)
+        if live:
+            self.engine.observe_demand(np.unique(live_ids), host_start)
         if cfg.scheduler == "inline":
             self.engine.drain()  # the deterministic pre-lookup drain point
         pre_fetch_s = self.store.stats.modeled_fetch_s
@@ -216,11 +383,16 @@ class PipelinedRuntime:
         # Wall timing covers lookup + the reported forward time only, so
         # the measured window matches the synchronous loop, which stages,
         # packages and flushes model outputs outside its timed window.
-        t_wall = time.perf_counter()
-        with self.engine.lock:
-            emb = self.store.lookup(ids)
-        lookup_wall_s = time.perf_counter() - t_wall
+        lookup_wall_s = 0.0
+        emb = None
+        if live:
+            t_wall = time.perf_counter()
+            with self.engine.lock:
+                emb = self.store.lookup(live_ids)
+            lookup_wall_s = time.perf_counter() - t_wall
         fetch_us = (self.store.stats.modeled_fetch_s - pre_fetch_s) * 1e6
+        if degraded:
+            emb = self._assemble_degraded(reqs, live, degraded, emb)
 
         fetch_done = host_start + fetch_us
         stall = max(0.0, fetch_done - max(prev_done, host_start))
@@ -247,6 +419,12 @@ class PipelinedRuntime:
                         args={"rid0": rid0, "n_req": len(reqs)})
 
         # ---- bookkeeping ----
+        if self.admission_stats is not None:
+            st = self.admission_stats
+            for r in live:
+                st.served[r.priority] += 1
+            for r in degraded:
+                st.degraded[r.priority] += 1
         tel.batches += 1
         tel.requests += len(reqs)
         tel.demand_fetch_ms += fetch_us * 1e-3
@@ -274,10 +452,18 @@ class PipelinedRuntime:
     # ---------------- results ----------------
 
     def results(self) -> dict:
-        return self.telemetry.as_dict()
+        d = self.telemetry.as_dict()
+        if self.admission_stats is not None:
+            d["admission"] = self.admission_stats.as_dict(self.cfg.admission)
+        return d
 
     def publish(self, reg, prefix: str = "rt"):
         """Publish runtime telemetry + engine live-state gauges into a
         :class:`repro.obs.MetricsRegistry` (the engine shares this
-        runtime's telemetry object, so one call covers both)."""
-        return self.engine.publish(reg, prefix)
+        runtime's telemetry object, so one call covers both).  With
+        admission control active the ``adm.*`` namespace rides along."""
+        self.engine.publish(reg, prefix)
+        if self.admission_stats is not None:
+            self.admission_stats.publish(reg, prefix="adm",
+                                         cfg=self.cfg.admission)
+        return reg

@@ -97,6 +97,7 @@ class PrefetchEngine:
         self._inflight: set = set()
         self._pf_eta: Dict[int, float] = {}   # key -> modeled completion us
         self._channel_free_us = 0.0           # background fetch channel
+        self._backpressure = False            # admission-control signal
         self._closed = False
         self._worker_exc = None               # thread-mode failure, if any
         if scheduler == "thread":
@@ -126,6 +127,16 @@ class PrefetchEngine:
         pf = np.asarray(prefetch_ids, np.int64).ravel()
         tel = self.telemetry
         tel.pf_submitted += int(pf.size)
+        if self._backpressure and pf.size:
+            # Admission-control pressure: the serving queue is backed up,
+            # so background prefetch traffic would only steal slow-tier
+            # bandwidth from demand fetches.  Drop the prefetch ids (the
+            # ranking trunk still applies — it is bookkeeping, not
+            # traffic) and account them so the fate identity closes:
+            # submitted == suppressed + deduped + cancelled + issued +
+            # queued.
+            tel.pf_suppressed += int(pf.size)
+            pf = _EMPTY
         if pf.size:
             # In-flight dedup (first occurrence wins, within and across
             # queued items): the store would filter the duplicate against
@@ -289,6 +300,13 @@ class PrefetchEngine:
         self._inflight.difference_update(np.asarray(pf).tolist())
 
     # ---------------- demand-side hooks ----------------
+
+    def set_backpressure(self, on: bool):
+        """Admission-control signal: while on, newly submitted prefetch
+        ids are suppressed (counted in ``pf_suppressed``) instead of
+        scheduled — graceful degradation keeps the modeled slow-tier
+        channel free for demand traffic under overload."""
+        self._backpressure = bool(on)
 
     def observe_demand(self, uniq_ids: np.ndarray, now_us: float):
         """Classify prefetch timeliness for a demand batch starting at

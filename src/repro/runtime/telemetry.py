@@ -49,6 +49,7 @@ class RuntimeTelemetry:
     requests: int = 0
     # ---- prefetch engine ----
     pf_submitted: int = 0          # rows handed to the engine
+    pf_suppressed: int = 0         # dropped at submit: backpressure on
     pf_deduped: int = 0            # dropped: already queued in-flight
     pf_cancelled_resident: int = 0  # dropped at issue: became resident
     pf_issued: int = 0             # rows actually populated
@@ -99,6 +100,7 @@ class RuntimeTelemetry:
         d = {
             "batches": self.batches, "requests": self.requests,
             "pf_submitted": self.pf_submitted,
+            "pf_suppressed": self.pf_suppressed,
             "pf_deduped": self.pf_deduped,
             "pf_cancelled_resident": self.pf_cancelled_resident,
             "pf_issued": self.pf_issued,
@@ -122,7 +124,8 @@ class RuntimeTelemetry:
         return d
 
     def merge(self, other: "RuntimeTelemetry") -> "RuntimeTelemetry":
-        for f in ("batches", "requests", "pf_submitted", "pf_deduped",
+        for f in ("batches", "requests", "pf_submitted", "pf_suppressed",
+                  "pf_deduped",
                   "pf_cancelled_resident", "pf_issued", "pf_populate_calls",
                   "pf_timely", "pf_late", "pf_unused",
                   "pf_channel_scheduled", "pf_eta_overwritten",
@@ -143,6 +146,7 @@ class RuntimeTelemetry:
         for key, val in (
             ("batches", self.batches), ("requests", self.requests),
             ("pf.submitted", self.pf_submitted),
+            ("pf.suppressed", self.pf_suppressed),
             ("pf.deduped", self.pf_deduped),
             ("pf.cancelled_resident", self.pf_cancelled_resident),
             ("pf.issued", self.pf_issued),

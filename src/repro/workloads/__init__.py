@@ -11,14 +11,18 @@ from repro.workloads import replay as _replay  # noqa: F401  (registers)
 from repro.workloads.harness import (GOLDEN_KEYS, build_store,
                                      golden_metrics, phase_steady_hit_rates,
                                      replay_scenario)
+from repro.workloads.overload import (OVERLOAD_KEYS, degradation_ratio,
+                                      overload_sweep, replay_overload)
 from repro.workloads.spec import (DRIFT_SCENARIOS, PAPER_TARGET_SCENARIOS,
                                   REGIMES, SCENARIOS, WorkloadSpec,
                                   iter_batches, make_spec, make_trace,
                                   parse_workload, scenario)
 
 __all__ = [
-    "DRIFT_SCENARIOS", "GOLDEN_KEYS", "PAPER_TARGET_SCENARIOS", "REGIMES",
-    "SCENARIOS", "WorkloadSpec", "build_store", "golden_metrics",
-    "iter_batches", "make_spec", "make_trace", "parse_workload",
-    "phase_steady_hit_rates", "replay_scenario", "scenario",
+    "DRIFT_SCENARIOS", "GOLDEN_KEYS", "OVERLOAD_KEYS",
+    "PAPER_TARGET_SCENARIOS", "REGIMES", "SCENARIOS", "WorkloadSpec",
+    "build_store", "degradation_ratio", "golden_metrics", "iter_batches",
+    "make_spec", "make_trace", "overload_sweep", "parse_workload",
+    "phase_steady_hit_rates", "replay_overload", "replay_scenario",
+    "scenario",
 ]

@@ -120,6 +120,30 @@ def multi_tenant(spec: WorkloadSpec, rng) -> tuple:
     return table_id, row_id
 
 
+@register("sustained_overload", params=("zipf_a", "load_x", "hot_frac",
+                                        "p_hot_end"))
+def sustained_overload(spec: WorkloadSpec, rng) -> tuple:
+    """Sustained overload traffic: a stationary zipf baseline whose hot
+    set *concentrates* as the surge persists — the fraction of accesses
+    slamming a tiny hot set (``hot_frac`` of each table) ramps linearly
+    from 0 to ``p_hot_end`` over the trace, modeling the skew
+    concentration RecShard observes when traffic spikes.  The ``load_x``
+    param is not read here: it rides on the spec for the serving harness
+    (:mod:`repro.workloads.overload`), which turns it into an offered
+    load of ``load_x`` times modeled compute capacity."""
+    n, R = spec.n_accesses, spec.rows_per_table
+    table_id = _tables(spec, rng, n)
+    ranks = _zipf_ranks(rng, float(spec.param("zipf_a", 1.2)), R, n)
+    salt = rng.integers(0, 2**31, size=spec.n_tables)
+    base_rows = _permute(ranks, salt[table_id], R)
+    hot = max(1, int(float(spec.param("hot_frac", 0.02)) * R))
+    h_ranks = _zipf_ranks(rng, 1.3, hot, n)
+    hot_rows = _permute(h_ranks, salt[table_id] ^ 0x9E3779B9, R)
+    p_hot = np.linspace(0.0, float(spec.param("p_hot_end", 0.5)), n)
+    is_hot = rng.random(n) < p_hot
+    return table_id, np.where(is_hot, hot_rows, base_rows)
+
+
 @register("churn", params=("zipf_a", "churn_per_k"))
 def churn(spec: WorkloadSpec, rng) -> tuple:
     """Popularity-decay churn: zipf over a *sliding* rank window — the

@@ -1,0 +1,307 @@
+"""SLO-aware admission control: config validation, EDF order, shed
+accounting, degraded answers, backpressure, and the fate identity
+``admitted == served + shed + degraded`` on every serving surface."""
+import numpy as np
+import pytest
+
+from repro.core.serving import MultiTableTieredStore
+from repro.core.sharded_serving import ShardedTieredStore
+from repro.core.tiered import TieredEmbeddingStore
+from repro.obs import MetricsRegistry, reconcile
+from repro.obs.reconcile import check_admission
+from repro.runtime import (AdmissionConfig, AdmissionQueue, AdmissionStats,
+                           PipelinedRuntime, Request, RuntimeConfig)
+from repro.sharding.embedding_shard import make_plan
+from repro.workloads import (degradation_ratio, make_spec, overload_sweep,
+                             replay_overload)
+
+EMPTY = np.empty(0, np.int64)
+
+
+def _host(n=200, d=8, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _req(rid, pri=0, arrival=0.0, deadline=float("inf")):
+    return Request(rid, np.array([rid % 50]), arrival_us=float(arrival),
+                   priority=pri, deadline_us=float(deadline))
+
+
+# ---------------- config validation ----------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(queue_bound=0),
+    dict(class_deadline_us=()),
+    dict(class_deadline_us=(float("nan"),)),
+    dict(class_deadline_us=(-1.0,)),
+    dict(backpressure_hi=1.5),
+    dict(backpressure_lo=0.9, backpressure_hi=0.5),
+    dict(backpressure_lo=float("nan")),
+])
+def test_admission_config_rejects_invalid(kw):
+    with pytest.raises(ValueError):
+        AdmissionConfig(**kw)
+
+
+def test_admission_config_deadlines():
+    cfg = AdmissionConfig(class_deadline_us=(10.0, 40.0))
+    assert cfg.n_classes == 2
+    assert cfg.class_name(0) == "gold" and cfg.class_name(1) == "silver"
+    assert cfg.deadline_for(1, 100.0) == 140.0
+    with pytest.raises(ValueError):
+        cfg.deadline_for(2, 0.0)
+    # inf budget is a legal "never degrade this class" knob
+    assert AdmissionConfig(
+        class_deadline_us=(float("inf"),)).deadline_for(0, 5.0) == float("inf")
+
+
+# ---------------- stats + identity ----------------
+
+
+def test_admission_stats_identity_and_publish():
+    st = AdmissionStats(n_classes=3)
+    st.admitted[0] += 4
+    st.served[0] += 2
+    st.shed[0] += 1
+    st.degraded[0] += 1
+    st.admitted[2] += 3
+    st.shed[2] += 3
+    st.check()  # holds
+    d = st.as_dict()
+    assert d["admitted"] == 7 and d["gold_served"] == 2
+    assert d["bronze_shed"] == 3 and d["silver_admitted"] == 0
+
+    reg = MetricsRegistry()
+    st.publish(reg)
+    flat = reg.as_dict()
+    assert flat["adm.admitted"] == 7
+    assert flat["adm.class.gold.degraded"] == 1
+    assert check_admission(flat) == []
+
+    st.served[0] += 1  # cook the books: served without admission
+    with pytest.raises(AssertionError):
+        st.check()
+
+
+def test_admission_stats_merge_additive():
+    a = AdmissionStats(n_classes=2)
+    b = AdmissionStats(n_classes=2)
+    a.admitted[0], a.served[0] = 3, 3
+    b.admitted[0], b.shed[0] = 2, 2
+    b.degraded_rows_default = 5
+    a.merge(b)
+    assert a.admitted[0] == 5 and a.served[0] == 3 and a.shed[0] == 2
+    assert a.degraded_rows_default == 5
+    a.check()
+
+
+def test_check_admission_catches_per_class_drift():
+    flat = {"adm.admitted": 10, "adm.served": 10, "adm.shed": 0,
+            "adm.degraded": 0,
+            "adm.class.gold.admitted": 6, "adm.class.gold.served": 6,
+            "adm.class.gold.shed": 0, "adm.class.gold.degraded": 0}
+    assert check_admission(flat)  # class sums != totals must be flagged
+
+
+# ---------------- queue: EDF order + shedding ----------------
+
+
+def test_queue_pops_in_edf_order_with_deterministic_ties():
+    cfg = AdmissionConfig(queue_bound=8)
+    aq = AdmissionQueue(cfg)
+    # rid 0 late deadline, rid 1 early, rid 2 ties rid 1 on deadline but
+    # arrived later, rid 3 ties rid 1 on deadline AND arrival (rid breaks)
+    aq.offer(_req(0, arrival=0.0, deadline=90.0))
+    aq.offer(_req(1, arrival=1.0, deadline=50.0))
+    aq.offer(_req(2, arrival=2.0, deadline=50.0))
+    aq.offer(_req(3, arrival=1.0, deadline=50.0))
+    assert [r.rid for r in aq.pop(3)] == [1, 3, 2]
+    assert [r.rid for r in aq.drain()] == [0]
+    with pytest.raises(ValueError, match="empty admission queue"):
+        aq.pop(4)
+
+
+def test_queue_sheds_lowest_priority_first():
+    cfg = AdmissionConfig(queue_bound=2, class_deadline_us=(10.0, 20.0, 40.0))
+    aq = AdmissionQueue(cfg)
+    st = aq.stats
+    assert aq.offer(_req(0, pri=2, arrival=0.0, deadline=40.0))
+    assert aq.offer(_req(1, pri=1, arrival=0.0, deadline=20.0))
+    # Full queue + gold arrival: the queued bronze request is displaced.
+    assert aq.offer(_req(2, pri=0, arrival=1.0, deadline=11.0))
+    assert st.shed == [0, 0, 1]
+    assert sorted(r.rid for r in aq.drain()) == [1, 2]
+    # Full queue of gold + bronze arrival: the incoming request is shed.
+    aq.offer(_req(3, pri=0, arrival=2.0, deadline=12.0))
+    aq.offer(_req(4, pri=0, arrival=2.0, deadline=12.0))
+    assert not aq.offer(_req(5, pri=2, arrival=3.0, deadline=43.0))
+    assert st.shed == [0, 0, 2]
+    assert st.total_admitted == 6
+    st.served[0] += 3  # rids 2, 3, 4
+    st.served[1] += 1  # rid 1
+    # fate identity: 6 admitted == 4 served + 2 shed (both bronze)
+    st.check()
+
+
+def test_queue_shed_tie_prefers_least_urgent_within_class():
+    cfg = AdmissionConfig(queue_bound=2)
+    aq = AdmissionQueue(cfg)
+    aq.offer(_req(0, pri=1, arrival=0.0, deadline=30.0))
+    aq.offer(_req(1, pri=1, arrival=0.0, deadline=99.0))  # least urgent
+    aq.offer(_req(2, pri=0, arrival=1.0, deadline=10.0))
+    kept = sorted(r.rid for r in aq.drain())
+    assert kept == [0, 2]  # rid 1 (latest deadline in worst class) shed
+
+
+# ---------------- degraded reads on every store surface ----------------
+
+
+def _assert_lookup_resident_contract(store, ids, cold_ids, atol=0.0):
+    full = np.asarray(store.lookup(ids))          # makes ids resident
+    before = store.stats.as_dict()
+    rows, n_def = store.lookup_resident(ids)
+    assert rows.shape == full.shape and n_def == 0
+    np.testing.assert_allclose(rows, full, atol=atol)
+    cold, n_def_cold = store.lookup_resident(cold_ids)
+    assert n_def_cold == len(cold_ids)
+    assert not cold.any()                          # pure zero defaults
+    assert store.stats.as_dict() == before         # zero stats mutation
+
+
+def test_lookup_resident_single_store():
+    store = TieredEmbeddingStore(_host(120, seed=1), capacity=32)
+    _assert_lookup_resident_contract(
+        store, np.arange(8, dtype=np.int64), np.arange(100, 110))
+
+
+def test_lookup_resident_single_store_quantized():
+    store = TieredEmbeddingStore(_host(120, seed=2), capacity=32,
+                                 quantize=True)
+    _assert_lookup_resident_contract(
+        store, np.arange(8, dtype=np.int64), np.arange(100, 110))
+
+
+def test_lookup_resident_multi_table():
+    tables = [_host(60, seed=3), _host(40, d=8, seed=4)]
+    store = MultiTableTieredStore(tables, capacity=24)
+    ids = np.array([0, 1, 2, 60, 61, 62], np.int64)  # both tables
+    _assert_lookup_resident_contract(store, ids, np.array([50, 95]),
+                                     atol=1e-6)
+
+
+def test_lookup_resident_sharded():
+    host = _host(100, seed=5)
+    plan = make_plan([100], n_shards=2, capacity=32, placement="row")
+    store = ShardedTieredStore(host, plan)
+    ids = np.array([0, 1, 2, 3, 7, 11], np.int64)
+    _assert_lookup_resident_contract(store, ids, np.array([80, 90, 99]),
+                                     atol=1e-6)
+
+
+# ---------------- runtime integration ----------------
+
+
+def _overload_rt(store, deadline_us=(50.0, 200.0, 800.0), queue_bound=8,
+                 degrade=True, **cfg_kw):
+    adm = AdmissionConfig(queue_bound=queue_bound,
+                          class_deadline_us=deadline_us, degrade=degrade)
+    return PipelinedRuntime(store, RuntimeConfig(
+        max_batch=4, pipeline_depth=2, interarrival_us=10.0,
+        compute_us=400.0, admission=adm, **cfg_kw))
+
+
+def test_admission_run_identity_and_full_shape():
+    """Saturating arrivals: the identity closes, degraded requests occur,
+    and every batch's embedding matrix keeps the full batch shape."""
+    store = TieredEmbeddingStore(_host(200, seed=6), capacity=32,
+                                 fetch_us_fixed=200.0, fetch_us_per_row=20.0)
+    rt = _overload_rt(store)
+    rng = np.random.default_rng(0)
+    stream = [(rng.integers(0, 200, size=3).astype(np.int64), int(p))
+              for p in rng.integers(0, 3, size=60)]
+    shapes = []
+
+    def step(b, emb):
+        shapes.append(np.asarray(emb).shape)
+        return 0.0, []
+
+    rt.run(iter(stream), step)
+    st = rt.admission_stats
+    st.check()
+    assert st.total_admitted == 60
+    assert st.total_shed > 0          # queue bound 8 under 40x overload
+    assert st.total_degraded > 0      # tight gold deadline
+    # every emb row count is 3 ids x the number of requests in its batch
+    assert all(s[0] % 3 == 0 and s[1] == 8 for s in shapes)
+    served_reqs = sum(s[0] // 3 for s in shapes)
+    assert served_reqs == st.total_served + st.total_degraded
+
+
+def test_admission_degrade_off_serves_everything_admitted():
+    store = TieredEmbeddingStore(_host(200, seed=7), capacity=32)
+    rt = _overload_rt(store, degrade=False)
+    stream = [(np.array([i % 200]), i % 3) for i in range(40)]
+    rt.run(iter(stream), lambda b, emb: (0.0, []))
+    st = rt.admission_stats
+    st.check()
+    assert st.total_degraded == 0
+    assert st.total_served + st.total_shed == st.total_admitted
+
+
+def test_admission_backpressure_suppresses_prefetch():
+    """Queue saturation must flip the engine's backpressure bit: some
+    submitted prefetch ids take the suppressed fate, and the extended
+    prefetch identity still closes."""
+    store = TieredEmbeddingStore(_host(200, seed=8), capacity=32,
+                                 fetch_us_fixed=200.0)
+    rt = _overload_rt(store, queue_bound=16)
+    rng = np.random.default_rng(1)
+    stream = [(rng.integers(0, 200, size=2).astype(np.int64), 2)
+              for _ in range(120)]
+
+    def step(b, emb):
+        return 0.0, [(EMPTY, EMPTY, np.arange(b, b + 4) % 200)]
+
+    rt.run(iter(stream), step)
+    tel = rt.telemetry
+    assert tel.pf_suppressed > 0
+    assert tel.pf_submitted == (tel.pf_suppressed + tel.pf_deduped
+                                + tel.pf_cancelled_resident + tel.pf_issued)
+    reg = MetricsRegistry()
+    rt.publish(reg)
+    assert reconcile(metrics=reg.as_dict(), strict=False) == []
+
+
+@pytest.mark.parametrize("kw", [
+    dict(pipeline_depth=1, prefetch=False),   # synchronous surface
+    dict(pipeline_depth=2),                   # pipelined surface
+    dict(shards=2),                           # sharded surface
+])
+def test_overload_replay_reconciles_on_surface(kw):
+    spec = make_spec("sustained_overload", n_accesses=4000)
+    res = replay_overload(spec, load_x=4.0, **kw)  # check=True reconciles
+    assert res["admitted"] == (res["served"] + res["shed"]
+                               + res["degraded"])
+    flat = {k: v for k, v in res["metrics"]["counters"].items()}
+    assert flat["adm.admitted"] > 0
+    assert check_admission(flat) == []
+
+
+def test_overload_replay_deterministic():
+    spec = make_spec("sustained_overload", n_accesses=4000)
+    a = replay_overload(spec, load_x=2.0)
+    b = replay_overload(spec, load_x=2.0)
+    for k in ("admitted", "served", "shed", "degraded", "goodput_rps",
+              "p99_ms", "modeled_s", "pf_suppressed"):
+        assert a[k] == b[k], k
+
+
+@pytest.mark.slow
+def test_overload_sweep_degrades_gracefully():
+    spec = make_spec("sustained_overload", n_accesses=12_000)
+    sweep = overload_sweep(loads=(1.0, 2.0, 4.0), spec=spec)
+    # shed monotonically non-decreasing in offered load
+    sheds = [sweep[x]["shed"] for x in (1.0, 2.0, 4.0)]
+    assert sheds == sorted(sheds)
+    assert degradation_ratio(sweep, hi=4.0, lo=1.0) >= 0.7

@@ -341,3 +341,87 @@ def test_engine_thread_worker_failure_surfaces_not_hangs():
     with pytest.raises(RuntimeError, match="prefetch worker failed"):
         eng.drain()
     eng.close()  # still shuts down cleanly after the failure
+
+
+# ---------------- micro-batcher / config edge cases (PR 8) ----------------
+
+
+def test_microbatcher_flush_empty_returns_empty_and_now():
+    """Flushing an empty batcher is a legitimate end-of-stream state
+    (overload runs drain to empty), not an error."""
+    mb = MicroBatcher(max_batch=4, deadline_us=50.0)
+    reqs, close = mb.flush(now_us=123.5)
+    assert reqs == [] and close == 123.5
+    reqs, close = mb.flush()  # default now
+    assert reqs == [] and close == 0.0
+
+
+def test_microbatcher_pop_empty_raises():
+    mb = MicroBatcher(max_batch=4)
+    with pytest.raises(ValueError, match="empty micro-batcher"):
+        mb.pop()
+
+
+def test_microbatcher_exactly_full_close_is_last_arrival():
+    """A batch that is exactly max_batch closes when its last member
+    arrived — the deadline term must not leak into a full batch."""
+    mb = MicroBatcher(max_batch=3, deadline_us=1000.0)
+    for i, t in enumerate((5.0, 7.0, 9.0)):
+        mb.push(Request(i, np.array([i]), arrival_us=t))
+    reqs, close = mb.pop()
+    assert len(reqs) == 3 and close == 9.0
+    assert len(mb) == 0
+
+
+def test_microbatcher_deadline_tie_between_oldest():
+    """Two requests with identical arrival times: the deadline trigger
+    fires once for both and FIFO order is preserved."""
+    mb = MicroBatcher(max_batch=10, deadline_us=40.0)
+    mb.push(Request(0, np.array([0]), arrival_us=10.0))
+    mb.push(Request(1, np.array([1]), arrival_us=10.0))
+    assert not mb.ready(now_us=49.0)
+    assert mb.ready(now_us=50.0)
+    reqs, close = mb.pop()
+    assert [r.rid for r in reqs] == [0, 1]
+    assert close == 50.0  # oldest arrival + deadline, finite
+
+
+def test_microbatcher_inf_deadline_partial_close_clamps_finite():
+    """deadline_us=inf + a forced partial pop must clamp the close time
+    to the last arrival: an infinite close time would poison every
+    latency percentile downstream."""
+    mb = MicroBatcher(max_batch=8)  # default deadline inf
+    mb.push(Request(0, np.array([0]), arrival_us=3.0))
+    mb.push(Request(1, np.array([1]), arrival_us=11.0))
+    reqs, close = mb.pop()
+    assert len(reqs) == 2
+    assert np.isfinite(close) and close == 11.0
+
+
+def test_microbatcher_rejects_bad_deadline():
+    with pytest.raises(ValueError):
+        MicroBatcher(max_batch=4, deadline_us=float("nan"))
+    with pytest.raises(ValueError):
+        MicroBatcher(max_batch=4, deadline_us=-1.0)
+    with pytest.raises(ValueError):
+        MicroBatcher(max_batch=0)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(max_batch=0),
+    dict(pipeline_depth=0),
+    dict(max_queue=0),
+    dict(deadline_us=float("nan")),
+    dict(deadline_us=-5.0),
+    dict(interarrival_us=float("nan")),
+    dict(interarrival_us=float("inf")),
+    dict(interarrival_us=-1.0),
+])
+def test_runtime_config_rejects_invalid(kw):
+    with pytest.raises(ValueError):
+        RuntimeConfig(**kw)
+
+
+def test_runtime_config_accepts_inf_deadline():
+    cfg = RuntimeConfig(deadline_us=float("inf"))
+    assert cfg.deadline_us == float("inf")
