@@ -524,6 +524,39 @@ def overload_degradation(ctx: BenchContext):
              "smooth-degradation gate: absolute floor 0.7 (no collapse)")
 
 
+def failover_resilience(ctx: BenchContext):
+    """Goodput under a deterministic mid-run shard kill vs the same
+    workload with no faults.  Hot-row replication + the degraded
+    ``lookup_resident`` contract keep every answer exact-or-zero (the
+    lockstep audit proves zero wrong rows) while recovery streams the
+    lost resident set back as int8 chunks; the perf gate floors the
+    kill/clean goodput ratio at 0.8 — losing a shard costs availability
+    headroom, never correctness or a collapse."""
+    from repro.workloads import make_spec
+    from repro.workloads.chaos import (DEFAULT_FAULT_PLAN, chaos_sweep,
+                                       failover_goodput)
+
+    n_acc = 24_000 if ctx.cfg.quick else 48_000
+    spec = make_spec("shard_failure", n_accesses=n_acc, seed=0)
+    sweep = chaos_sweep(plans=(None, DEFAULT_FAULT_PLAN), spec=spec,
+                        batch=128, shards=4, policy="lru")
+    clean, kill = sweep[""], sweep[DEFAULT_FAULT_PLAN]
+    ctx.emit("failover", "goodput_rps_clean", clean["goodput_rps"],
+             f"{clean['batches']} batches, {clean['shards']} shards")
+    ctx.emit("failover", "goodput_rps_kill", kill["goodput_rps"],
+             f"plan {kill['fault_plan']}; replica rows "
+             f"{kill['failover_replica']} degraded "
+             f"{kill['failover_degraded']} of {kill['served']}")
+    ctx.emit("failover", "wrong_rows_kill", kill["wrong_rows"],
+             "lockstep byte-audit vs the no-fault run; contract: 0")
+    ctx.emit("failover", "recovery_bytes_int8", kill["recovery_bytes"],
+             f"{kill['recovery_rows']} rows in {kill['recovery_chunks']} "
+             f"chunks; fp32-equivalent {kill['recovery_bytes_raw']} B")
+    ratio = failover_goodput(sweep)
+    ctx.emit("failover", "failover_goodput_kill_vs_clean", round(ratio, 4),
+             "shard-loss resilience gate: absolute floor 0.8")
+
+
 def run(ctx: BenchContext):
     lookup_throughput(ctx)
     tracing_overhead(ctx)
@@ -536,3 +569,4 @@ def run(ctx: BenchContext):
     scenario_matrix(ctx)
     learned_vs_voyager(ctx)
     overload_degradation(ctx)
+    failover_resilience(ctx)

@@ -113,8 +113,43 @@ def selftest() -> int:
     if not check_all(broken_cls):
         print("selftest: checker missed a per-class vs total drift")
         return 1
-    print("selftest: traced scenario + overload surfaces reconcile; "
-          "violations are caught")
+    # Fault-tolerance accounting (PR 9): a chaos replay with a mid-run
+    # shard kill must reconcile end to end (ft.* identities included in
+    # check_all via the published snapshot) with zero wrong answers.
+    from repro.workloads import replay_chaos
+    res = replay_chaos(make_spec("shard_failure", n_accesses=6000,
+                                 n_tables=4, rows_per_table=256),
+                       batch=128, shards=4,
+                       fault_plan="kill:1@mid,recover:1@75%")
+    if res["wrong_rows"] != 0:
+        print(f"selftest: chaos replay served {res['wrong_rows']} wrong rows")
+        return 1
+    flat = res["metrics"]["counters"]
+    if flat.get("ft.kills", 0) != 1 or flat.get("ft.recoveries", 0) != 1:
+        print("selftest: chaos replay published no kill/recovery counters")
+        return 1
+
+    # And the checker must catch cooked ft books: a failover row whose
+    # source vanished, and a retry episode with no outcome.
+    broken_ft = {"ft.served": 100, "ft.primary": 90,
+                 "ft.failover_replica": 5, "ft.failover_degraded": 4,
+                 "ft.degraded_default": 0,
+                 "ft.retries": 0, "ft.retry_succeeded": 0,
+                 "ft.retry_exhausted": 0}
+    if not check_all(broken_ft):
+        print("selftest: checker missed an ft answer-source violation")
+        return 1
+    broken_retry = {"ft.served": 10, "ft.primary": 10,
+                    "ft.failover_replica": 0, "ft.failover_degraded": 0,
+                    "ft.degraded_default": 0,
+                    "ft.retries": 3, "ft.retry_succeeded": 1,
+                    "ft.retry_exhausted": 1}
+    if not check_all(broken_retry):
+        print("selftest: checker missed a retry-outcome violation")
+        return 1
+
+    print("selftest: traced scenario + overload surfaces + chaos replay "
+          "reconcile; violations are caught")
     return 0
 
 

@@ -48,6 +48,15 @@ deterministic on the VirtualClock):
   0.7* (graceful degradation means shedding and degraded answers absorb
   the excess — goodput must not collapse as load quadruples).
 
+One guards fault tolerance (bench ``failover``; counter-derived,
+deterministic on the VirtualClock):
+
+* ``failover_goodput_kill_vs_clean`` — goodput (exact-answer rows per
+  modeled second) under a deterministic mid-run shard kill relative to
+  the same workload with no faults; a floor metric with an *absolute
+  floor of 0.8* (hot-row replication + the degraded contract must keep
+  the service exact-or-zero and near full speed through a shard loss).
+
 A metric regresses when it moves more than ``tolerance`` (default 30%)
 past its baseline in the bad direction.  Exit 1 on any regression —
 wired into the CI bench-smoke lane after the bench_e2e smoke.
@@ -133,6 +142,8 @@ def main(argv=None) -> int:
                   "tracing_on_lookup_slowdown")
     check_floor(("overload", "overload_goodput_4x_vs_1x"),
                 "overload_goodput_4x_vs_1x", floor=0.7)
+    check_floor(("failover", "failover_goodput_kill_vs_clean"),
+                "failover_goodput_kill_vs_clean", floor=0.8)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)

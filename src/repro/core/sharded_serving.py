@@ -27,6 +27,20 @@ Telemetry goes beyond the merged :class:`~repro.core.tiered.TierStats`:
 * **stall** — per-shard modeled slow-tier time, plus the *critical-path*
   view: per batch, workers fetch in parallel, so the batch pays the max
   over shards, not the sum.  ``parallel_fetch_speedup`` is the ratio.
+
+**Fault tolerance** (``arm_faults`` / ``fault_plan=``): a deterministic
+:class:`~repro.runtime.faults.FaultInjector` drives per-shard health on
+the shared virtual clock.  A dead shard's rows are answered from the
+plan's hot-row replica set when replicated (exact bytes), else through
+the degraded ``lookup_resident`` contract (stale-but-resident row or
+zero default — never a wrong vector, never a hang); transient fetch
+failures retry through a clock-driven deadline-aware wrapper; recovery
+rebuilds the shard store and streams the lost resident set back in
+bounded background chunks through the shard's prefetch channel (int8 on
+the modeled wire, exact rows from the surviving host tier).  Everything
+is accounted in the exactly-reconciled ``ft.*`` namespace
+(:func:`repro.obs.reconcile.check_ft`).  With no plan armed, the serving
+path is byte-identical to before this layer existed.
 """
 from __future__ import annotations
 
@@ -57,6 +71,7 @@ class ShardedTieredStore:
     def __init__(self, host: np.ndarray, plan: ShardPlan,
                  policy: str = "lru", quantize: bool = False,
                  fetch_us_fixed: float = 30.0, with_engines: bool = True,
+                 fault_plan=None, fault_horizon: Optional[int] = None,
                  **store_kw):
         if host.shape[0] != plan.n_vectors:
             raise ValueError(f"host has {host.shape[0]} rows, "
@@ -64,6 +79,12 @@ class ShardedTieredStore:
         self.plan = plan
         self.n_shards = plan.n_shards
         self.emb_dim = host.shape[1]
+        # Kept for the fault layer: replica rows come from here, and a
+        # recovered shard's replacement store is rebuilt over host[g].
+        self._host = np.asarray(host)
+        self._policy = policy
+        self._quantize = quantize
+        self._store_kw = dict(store_kw)
         # Per-shard stores model the per-row slow-tier cost; the fixed
         # per-batch overhead is charged at the facade (once per batch with
         # a miss for the sum view, once per missing *shard* for the
@@ -102,6 +123,22 @@ class ShardedTieredStore:
                 for s, (st, tel) in enumerate(zip(self.stores,
                                                   self.engine_telemetry))
             ]
+        # ---- hot-row replication (exact failover answers) ----
+        self._replica_index = None   # global id -> replica row (-1: none)
+        self._replica_rows = None    # (k, D) exact host bytes
+        rep = plan.replicated_ids
+        if rep is not None and len(rep):
+            rep = np.asarray(rep, np.int64)
+            self._replica_index = np.full(plan.n_vectors, -1, np.int64)
+            self._replica_index[rep] = np.arange(len(rep))
+            self._replica_rows = self._host[rep].copy()
+        # ---- fault layer (off by default: path byte-identical) ----
+        self._injector = None
+        self._ft = None
+        self._lost_rows = {}    # shard -> local ids resident at kill time
+        self._recovery = {}     # shard -> list of pending local-id chunks
+        if fault_plan is not None:
+            self.arm_faults(fault_plan, fault_horizon)
 
     @classmethod
     def build(cls, host: np.ndarray, rows_per_table: Sequence[int],
@@ -110,23 +147,56 @@ class ShardedTieredStore:
               frequencies: Optional[np.ndarray] = None,
               fast_weights: Optional[Sequence[float]] = None,
               profile_ids: Optional[np.ndarray] = None,
+              replicate_hot: int = 0,
               **kw) -> "ShardedTieredStore":
         """Plan + store in one call.  ``profile_ids`` (a trace sample)
-        stands in for explicit ``frequencies`` under ``"freq"``."""
+        stands in for explicit ``frequencies`` under ``"freq"`` and for
+        ``replicate_hot`` (top-k hot rows resident on every shard)."""
         if capacity is None:
             raise ValueError("capacity (total fast-tier rows) is required")
         if frequencies is None and profile_ids is not None:
             frequencies = trace_frequencies(profile_ids, host.shape[0])
         plan = make_plan(rows_per_table, n_shards, int(capacity),
                          placement, frequencies=frequencies,
-                         fast_weights=fast_weights)
+                         fast_weights=fast_weights,
+                         replicate_hot=replicate_hot)
         return cls(host, plan, **kw)
+
+    def arm_faults(self, fault_plan, horizon_batches: Optional[int] = None,
+                   seed: int = 0):
+        """Arm deterministic fault injection (a :class:`~repro.runtime.
+        faults.FaultPlan` or its CLI string form, e.g. ``"kill:1@mid,
+        recover:1@75%"``).  ``horizon_batches`` resolves fractional event
+        times.  Returns the :class:`~repro.runtime.faults.FaultInjector`."""
+        from repro.runtime.faults import FaultInjector, FaultPlan, FtStats
+        if self._engines is None:
+            raise ValueError("fault injection needs with_engines=True "
+                             "(the shared virtual clock drives the "
+                             "fault timeline)")
+        if isinstance(fault_plan, str):
+            fault_plan = FaultPlan.parse(fault_plan, seed=seed)
+        self._injector = FaultInjector(fault_plan, self.n_shards,
+                                       horizon_batches)
+        self._ft = FtStats(n_shards=self.n_shards)
+        return self._injector
+
+    @property
+    def ft_stats(self):
+        """The ``ft.*`` counters (None until :meth:`arm_faults`)."""
+        return self._ft
 
     # ---------------- routing + merge (the all-to-all) ----------------
 
     def lookup(self, global_ids: np.ndarray) -> jnp.ndarray:
         """(M,) global ids -> (M, D): scatter ids shard-locally, one
         batched per-shard lookup each, gather back in request order."""
+        inj = self._injector
+        if inj is not None:
+            # Fault timeline first: events scheduled for this batch index
+            # fire before any routing, then each recovering shard streams
+            # one bounded background chunk (serving never halts).
+            self._poll_faults(self.batches)
+            self._pump_recovery()
         gid, shard, local = self.plan.route(global_ids)
         self.batches += 1
         loads = np.bincount(shard, minlength=self.n_shards)
@@ -138,9 +208,16 @@ class ShardedTieredStore:
         missed_any = False
         critical_us = 0.0
         tr = get_tracer()
+        if inj is not None:
+            self._ft.served += int(len(gid))
         for s in np.flatnonzero(loads).tolist():
             m = shard == s
             st = self.stores[s]
+            if inj is not None and not inj.up[s]:
+                # Dead shard: replicas / degraded contract, no slow-tier
+                # work, zero critical-path contribution (bounded stall).
+                self._serve_failover(s, gid[m], local[m], out, m)
+                continue
             f0, od0 = st.stats.modeled_fetch_s, st.stats.on_demand_rows
             if tr.enabled:
                 t_s = tr.clock.now()
@@ -149,13 +226,38 @@ class ShardedTieredStore:
             if self._engines is not None and self._engines[s]._pf_eta:
                 self._engines[s].observe_demand(np.unique(local[m]),
                                                 self.clock.now())
-            # lookup_host: the all-to-all merge is host-side, so each
-            # worker materializes in one transfer (no device-side slice).
-            out[m] = st.lookup_host(local[m])
-            d_us = (st.stats.modeled_fetch_s - f0) * 1e6
+            extra_us = 0.0
+            if (inj is not None and inj.flaky[s] > 0.0
+                    and bool((~st.resident_mask(local[m])).any())):
+                # The slice needs the slow tier and the channel is flaky:
+                # fetch through the clock-driven retry wrapper.  Exhausted
+                # episodes fall back to the degraded contract for this
+                # slice — the slow tier stays un-touched, never hung on.
+                rows, extra_us, ok = self._fetch_with_retry(s, st, local[m])
+                self._ft.retry_overhead_ms += extra_us * 1e-3
+                if ok:
+                    out[m] = rows
+                    self._ft.primary += int(loads[s])
+                else:
+                    r, nd = st.lookup_resident(local[m])
+                    out[m] = r.astype(self.out_dtype, copy=False)
+                    self._ft.failover_degraded += int(loads[s])
+                    self._ft.degraded_default += int(nd)
+            else:
+                # lookup_host: the all-to-all merge is host-side, so each
+                # worker materializes in one transfer (no device-side
+                # slice).
+                out[m] = st.lookup_host(local[m])
+                if inj is not None:
+                    self._ft.primary += int(loads[s])
+            d_us = (st.stats.modeled_fetch_s - f0) * 1e6 + extra_us
             if st.stats.on_demand_rows > od0:
                 missed_any = True
                 d_us += self.fetch_us_fixed
+            if inj is not None and inj.slow[s] != 1.0:
+                # Congested / throttled host: its fetch window stretches.
+                self._ft.slow_ms += d_us * (inj.slow[s] - 1.0) * 1e-3
+                d_us *= inj.slow[s]
             critical_us = max(critical_us, d_us)
             if tr.enabled:
                 # Per-shard route+gather window on this worker's track.
@@ -171,6 +273,160 @@ class ShardedTieredStore:
             # critical path (what timeliness is measured against).
             self.clock.advance(critical_us)
         return jnp.asarray(out)
+
+    # ---------------- fault handling (armed via arm_faults) ----------------
+
+    def _poll_faults(self, batch: int):
+        """Fire the injector's due transitions and apply their store-side
+        effects; every edge gets a span instant on the shard's track."""
+        tr = get_tracer()
+        for e, clear in self._injector.poll(batch, self.clock.now()):
+            if tr.enabled:
+                name = f"ft.{e.kind}" + ("_clear" if clear else "")
+                tr.add_instant("ft", name, ts=self.clock.now(),
+                               track=f"shard-{e.shard}",
+                               args={"shard": e.shard, "batch": batch,
+                                     "factor": e.factor})
+            if e.kind == "kill" and not clear:
+                self._on_kill(e.shard)
+            elif e.kind == "recover" and not clear:
+                self._on_recover(e.shard)
+
+    def _on_kill(self, s: int):
+        """The shard process dies.  Its store object survives only as a
+        read-only stale standby snapshot (the facade's last-known-good
+        view, what `lookup_resident` answers from); in-flight prefetch
+        work is cancelled with the ``pf.shard_down`` fate and staged
+        model outputs are discarded — nothing may mutate a dead shard."""
+        self._ft.kills += 1
+        st = self.stores[s]
+        # The resident set at kill time is what recovery must restore.
+        self._lost_rows[s] = np.flatnonzero(st._slot_map >= 0).astype(
+            np.int64)
+        for item in st._staged:
+            self._ft.staged_dropped += int(np.asarray(item[2]).size)
+        st._staged.clear()
+        self._engines[s].set_down(True)
+
+    def _on_recover(self, s: int):
+        """A replacement worker comes up *empty*: rebuild the shard store
+        fresh over the surviving host-tier slice (cumulative counters
+        carry over — the shard's history did happen), re-open its
+        prefetch engine, and queue the lost resident set for bounded
+        background restoration."""
+        inj, ft = self._injector, self._ft
+        old = self.stores[s]
+        kw = dict(self._store_kw)
+        kw.pop("warmup_batch", None)  # shape buckets are already compiled
+        g = self.plan.global_ids[s]
+        new = TieredEmbeddingStore(self._host[g], int(old.capacity),
+                                   policy=self._policy,
+                                   quantize=self._quantize,
+                                   fetch_us_fixed=0.0, **kw)
+        new.stats = old.stats
+        self.stores[s] = new
+        self._engines[s].store = new
+        self._engines[s].set_down(False)
+        ft.down_us[s] += inj.close_downtime(s, self.clock.now())
+        ft.recoveries += 1
+        lost = self._lost_rows.pop(s, None)
+        if lost is not None and lost.size:
+            chunk = max(1, int(inj.plan.recovery_chunk))
+            self._recovery[s] = [lost[i:i + chunk]
+                                 for i in range(0, lost.size, chunk)]
+
+    def _pump_recovery(self):
+        """One bounded chunk per recovering shard per batch: the lost
+        resident set streams back through the shard's prefetch channel as
+        int8 row transfers (accounted on the modeled wire), with exact
+        values re-materialized from the surviving host tier — recovery
+        can never introduce a wrong vector."""
+        if not self._recovery:
+            return
+        from repro.distributed.compression import quantize_int8
+        ft, tr = self._ft, get_tracer()
+        for s in sorted(self._recovery):
+            chunks = self._recovery[s]
+            loc = chunks.pop(0)
+            rows = self.stores[s].host[loc]
+            q, _scale = quantize_int8(jnp.asarray(rows))
+            ft.recovery_bytes += int(q.size) + 4          # int8 + scale
+            ft.recovery_bytes_raw += int(loc.size) * self.emb_dim * 4
+            eng = self._engines[s]
+            eng.submit(np.empty(0, np.int64), np.empty(0, np.int64), loc,
+                       now_us=self.clock.now())
+            eng.drain()
+            ft.recovery_rows += int(loc.size)
+            ft.recovery_chunks += 1
+            if not chunks:
+                del self._recovery[s]
+                if tr.enabled:
+                    tr.add_instant("ft", "ft.recovery_complete",
+                                   ts=self.clock.now(), track=f"shard-{s}",
+                                   args={"shard": s,
+                                         "rows": ft.recovery_rows})
+
+    def _serve_failover(self, s: int, g: np.ndarray, loc: np.ndarray,
+                        out: np.ndarray, m: np.ndarray):
+        """Answer a dead shard's slice: replicated rows exactly from the
+        hot-row replica set, the rest via the degraded stale-resident /
+        zero-default contract on the standby snapshot."""
+        ft = self._ft
+        idx = np.flatnonzero(m)
+        if self._replica_index is not None:
+            rep_loc = self._replica_index[g]
+            is_rep = rep_loc >= 0
+        else:
+            is_rep = np.zeros(len(g), bool)
+        if is_rep.any():
+            out[idx[is_rep]] = self._replica_rows[
+                rep_loc[is_rep]].astype(self.out_dtype, copy=False)
+            ft.failover_replica += int(np.count_nonzero(is_rep))
+        miss = ~is_rep
+        if miss.any():
+            rows, nd = self.stores[s].lookup_resident(loc[miss])
+            out[idx[miss]] = rows.astype(self.out_dtype, copy=False)
+            ft.failover_degraded += int(np.count_nonzero(miss))
+            ft.degraded_default += int(nd)
+
+    def _fetch_with_retry(self, s: int, st, loc: np.ndarray):
+        """One retry *episode* around a flaky shard's fetch: each failed
+        attempt costs the plan's timeout, backoffs charge modeled time
+        (never a wall-clock sleep), and the whole episode is bounded by
+        the retry deadline.  Returns ``(rows, extra_us, ok)``; the store
+        mutates exactly once, on the successful attempt."""
+        from repro.distributed.fault_tolerance import (RetryDeadlineExceeded,
+                                                       retry_step)
+        from repro.runtime.faults import TransientFetchError
+        inj, ft = self._injector, self._ft
+        fp = inj.plan
+        extra = [0.0]
+        failures = [0]
+
+        def attempt():
+            if inj.draw_failure(s):
+                failures[0] += 1
+                extra[0] += fp.retry_timeout_us
+                raise TransientFetchError(
+                    f"shard {s}: injected fetch timeout")
+            return st.lookup_host(loc)
+
+        try:
+            rows = retry_step(
+                attempt, retries=fp.max_retries,
+                backoff_s=fp.retry_backoff_us * 1e-6,
+                retryable=(TransientFetchError,),
+                sleep=lambda sec: extra.__setitem__(0, extra[0] + sec * 1e6),
+                now=lambda: extra[0] * 1e-6,
+                deadline_s=fp.retry_deadline_us * 1e-6)
+            if failures[0]:
+                ft.retries += 1
+                ft.retry_succeeded += 1
+            return rows, extra[0], True
+        except (TransientFetchError, RetryDeadlineExceeded):
+            ft.retries += 1
+            ft.retry_exhausted += 1
+            return None, extra[0], False
 
     def resident_mask(self, global_ids: np.ndarray) -> np.ndarray:
         gid, shard, local = self.plan.route(global_ids)
@@ -203,6 +459,15 @@ class ShardedTieredStore:
         _, p_shard, p_loc = self.plan.route(prefetch_ids)
         for s in np.unique(np.concatenate((t_shard, p_shard))).tolist():
             tm, pm = t_shard == s, p_shard == s
+            if (staged and self._injector is not None
+                    and not self._injector.up[s]):
+                # Dead shard, direct staging path (bypasses the engine):
+                # discard with its own non-identity counter — these rows
+                # were never pf.submitted, so they must not take a
+                # pf-fate; the engine path below accounts its own drops
+                # as pf.shard_down.
+                self._ft.staged_dropped += int(np.count_nonzero(pm))
+                continue
             if staged:
                 self.stores[s].stage_model_outputs(t_loc[tm], bits[tm],
                                                    p_loc[pm])
@@ -229,7 +494,9 @@ class ShardedTieredStore:
         self._route_outputs(trunk, bits, prefetch_ids, staged=True)
 
     def flush_staged(self):
-        for st in self.stores:
+        for s, st in enumerate(self.stores):
+            if self._injector is not None and not self._injector.up[s]:
+                continue  # a dead shard's standby snapshot must not mutate
             st.flush_staged()
 
     def warmup(self, batch_hint: int):
@@ -294,9 +561,12 @@ class ShardedTieredStore:
         }
         if self._engines is not None:
             for k in ("pf_submitted", "pf_deduped", "pf_cancelled_resident",
-                      "pf_issued", "pf_timely", "pf_late"):
+                      "pf_shard_down", "pf_issued", "pf_timely", "pf_late"):
                 d[f"per_shard_{k}"] = [getattr(t, k)
                                        for t in self.engine_telemetry]
+        if self._injector is not None:
+            d["shard_up"] = self._injector.up.tolist()
+            d["ft"] = self._ft.as_dict()
         return d
 
     def per_shard_hit_rates(self) -> List[float]:
@@ -322,4 +592,13 @@ class ShardedTieredStore:
                 float(self._shard_lookups[s]) / mean_load)
             if self._engines is not None:
                 self._engines[s].publish(reg, prefix=f"shard.{s}.rt")
+        if self._ft is not None:
+            # Fold any still-open downtime window into the per-shard
+            # gauges without mutating the accumulated counters.
+            saved = self._ft.down_us
+            self._ft.down_us = saved + np.asarray(
+                [self._injector.down_time_us(s, self.clock.now())
+                 for s in range(self.n_shards)])
+            self._ft.publish(reg)
+            self._ft.down_us = saved
         return reg

@@ -22,30 +22,69 @@ import os
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple, Type, Union
 
 import jax
 
 
+class RetryDeadlineExceeded(TimeoutError):
+    """The retry episode's wall/virtual-time deadline passed before a
+    successful attempt; carries the last underlying error as cause."""
+
+
 def retry_step(fn: Callable, *args, retries: int = 3, backoff_s: float = 0.5,
-               on_retry: Optional[Callable] = None):
-    """Run fn(*args); retry transient failures with exponential backoff."""
+               on_retry: Optional[Callable] = None,
+               retryable: Union[Type[BaseException],
+                                Tuple[Type[BaseException], ...]] = Exception,
+               sleep: Optional[Callable[[float], None]] = None,
+               now: Optional[Callable[[], float]] = None,
+               deadline_s: Optional[float] = None):
+    """Run fn(*args); retry *retryable* failures with exponential backoff.
+
+    Serving-path requirements (vs the original train-loop helper):
+
+    * ``retryable`` — only the named exception classes are retried;
+      anything else (a logic bug, a KeyboardInterrupt) propagates on the
+      first raise instead of being swallowed by a catch-all.  The default
+      ``Exception`` keeps the legacy train-loop behavior.
+    * ``sleep`` / ``now`` — injectable clock.  On the serving path these
+      charge modeled microseconds to the deterministic virtual timeline
+      (no bare ``time.sleep`` blocking a request); defaults keep
+      wall-clock semantics for the train loop.
+    * ``deadline_s`` — a hard bound on the whole episode measured via
+      ``now()``: if the next backoff would land past the deadline, raise
+      :class:`RetryDeadlineExceeded` immediately so admission deadlines
+      still hold (a retry loop must never outlast the request).
+    """
+    _sleep = sleep if sleep is not None else time.sleep
+    _now = now if now is not None else time.monotonic
+    start = _now() if deadline_s is not None else 0.0
     attempt = 0
     while True:
         try:
             return fn(*args)
-        except Exception as e:  # noqa: BLE001 — deliberate catch-all boundary
+        except retryable as e:
             attempt += 1
             if attempt > retries:
                 raise
+            pause = backoff_s * (2 ** (attempt - 1))
+            if deadline_s is not None and (_now() - start) + pause > deadline_s:
+                raise RetryDeadlineExceeded(
+                    f"retry deadline {deadline_s}s exceeded after "
+                    f"{attempt} attempt(s)") from e
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(backoff_s * (2 ** (attempt - 1)))
+            _sleep(pause)
 
 
 @dataclass
 class StragglerMonitor:
-    """EWMA step-time tracker with outlier detection."""
+    """EWMA step-time tracker with outlier detection.
+
+    ``clock`` is optional and only used by :meth:`record_since` for
+    callers that want the monitor to own timing; ``record`` takes an
+    explicit duration and needs no clock at all.
+    """
 
     alpha: float = 0.1
     k_sigma: float = 3.0
@@ -54,6 +93,17 @@ class StragglerMonitor:
     var: float = 0.0
     n: int = 0
     slow_steps: List[int] = field(default_factory=list)
+    clock: Optional[Callable[[], float]] = None
+    _last_t: Optional[float] = None
+
+    def record_since(self, step: int) -> bool:
+        """Record the interval since the previous call using the injected
+        clock (defaults to ``time.monotonic``). First call only arms."""
+        now = (self.clock or time.monotonic)()
+        prev, self._last_t = self._last_t, now
+        if prev is None:
+            return False
+        return self.record(step, now - prev)
 
     def record(self, step: int, dt: float) -> bool:
         """Returns True if this step is a straggler outlier."""
@@ -97,14 +147,19 @@ class ElasticMesh:
 
 
 class Heartbeat:
-    def __init__(self, path: str, every_s: float = 30.0):
+    """Periodic liveness file; ``clock`` is injectable so the cadence can
+    run on a virtual timeline in tests (first beat always writes)."""
+
+    def __init__(self, path: str, every_s: float = 30.0,
+                 clock: Optional[Callable[[], float]] = None):
         self.path = Path(path)
         self.every_s = every_s
-        self._last = 0.0
+        self.clock = clock or time.time
+        self._last: Optional[float] = None
 
     def beat(self, step: int, **info):
-        now = time.time()
-        if now - self._last < self.every_s:
+        now = self.clock()
+        if self._last is not None and now - self._last < self.every_s:
             return
         self._last = now
         self.path.parent.mkdir(parents=True, exist_ok=True)

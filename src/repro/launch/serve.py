@@ -40,7 +40,8 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
                 compute_us: Optional[float] = None, adapt: bool = False,
                 adapt_cfg=None, model=None, overload: float = 0.0,
                 priority_mix=None, queue_bound: int = 0,
-                log=None) -> Dict:
+                fault_plan: str = "", fault_seed: int = 0,
+                replicate_hot: int = 0, log=None) -> Dict:
     """Replay a trace as DLRM inference batches through the tiered store.
 
     ``multi_table=True`` serves through the per-table facade (one batched
@@ -80,6 +81,14 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     outputs (:class:`~repro.core.model_runtime.LearnedController`) — on
     both the synchronous and the pipelined (``VirtualClock``) path.
 
+    ``fault_plan`` (requires ``shards``) arms deterministic fault
+    injection on the sharded store — the CLI grammar from
+    :class:`~repro.runtime.faults.FaultPlan` (``"kill:1@mid,
+    recover:1@75%"``; fractional times resolve against the batch count).
+    ``replicate_hot`` keeps the top-k profiled rows resident on every
+    shard so a dead shard's hot traffic stays exactly answerable.  The
+    result gains an ``"ft"`` key and the reconciled ``ft.*`` namespace.
+
     ``overload > 0`` (requires ``async_prefetch``) serves through the
     SLO-aware admission path (:mod:`repro.runtime.admission`): requests
     arrive open-loop at ``overload`` times the modeled compute capacity
@@ -101,14 +110,23 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     # measured path): without this, the first batch that hits each
     # power-of-two bucket pays an XLA compile inside the latency window —
     # visible as ~600ms p99 spikes against a ~10ms p50.
+    if fault_plan and not shards:
+        raise ValueError("--fault-plan requires --shards (the fault layer "
+                         "lives in the sharded store)")
     if shards:
         from repro.core.sharded_serving import ShardedTieredStore
 
-        profile = trace.global_id if placement == "freq" else None
+        profile = (trace.global_id
+                   if placement == "freq" or replicate_hot else None)
         store = ShardedTieredStore.build(
             host, trace.rows_per_table, shards, placement,
             capacity=capacity, policy=pol, profile_ids=profile,
+            replicate_hot=int(replicate_hot),
             fetch_us_per_row=fetch_us_per_row, warmup_batch=per_batch)
+        if fault_plan:
+            store.arm_faults(
+                fault_plan, seed=fault_seed,
+                horizon_batches=len(trace.global_id) // per_batch)
     elif multi_table:
         store = MultiTableTieredStore.from_global_table(
             host, trace.rows_per_table, capacity=capacity, policy=pol,
@@ -344,6 +362,9 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     if shards:
         st["shard"] = store.shard_telemetry()
         st["shard_load_imbalance"] = st["shard"]["load_imbalance"]
+        if store.ft_stats is not None:
+            store.ft_stats.check()
+            st["ft"] = store.ft_stats.as_dict()
 
     # Unified metrics registry: every telemetry producer of the run
     # publishes into one namespace, so the reconciliation checker (and
@@ -427,6 +448,21 @@ def main(argv=None):
                     help="admission-queue bound in requests (default: 4 "
                          "batches); the excess is shed "
                          "lowest-priority-first")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault schedule for the sharded "
+                         "store (requires --shards): comma-separated "
+                         "kind[:shard[xfactor]]@start[..end] events with "
+                         "kinds kill/recover/slow/flaky and times as batch "
+                         "indices, percentages or 'mid' — e.g. "
+                         "'kill:1@mid,recover:1@75%' or "
+                         "'flaky:2x0.3@25%..75%'")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the fault plan's transient-failure "
+                         "draws (byte-reproducible per seed)")
+    ap.add_argument("--replicate-hot", type=int, default=0,
+                    help="replicate the top-k profiled hot rows on every "
+                         "shard (RecShard-style) so a dead shard's hot "
+                         "traffic is answered exactly from survivors")
     ap.add_argument("--workload", default="",
                     help="serve a named workload scenario instead of the "
                          "default calibrated trace: a catalog name "
@@ -532,7 +568,10 @@ def main(argv=None):
                               float(w) for w in
                               args.priority_mix.split(","))
                           if args.priority_mix else None,
-                          queue_bound=args.queue_bound, log=print)
+                          queue_bound=args.queue_bound,
+                          fault_plan=args.fault_plan,
+                          fault_seed=args.fault_seed,
+                          replicate_hot=args.replicate_hot, log=print)
     finally:
         if tracer is not None:
             install_tracer(None)

@@ -17,8 +17,9 @@ Identities (see docs/architecture.md for the derivations):
 * **store**:   ``fast.hits + fast.misses == lookups``  (request level),
   ``fast.prefetch_hits <= fast.hits``;
 * **prefetch fate**:  ``pf.submitted == pf.suppressed + pf.deduped
-  + pf.cancelled_resident + pf.issued + pf.queued``  (queued == still
-  staged at snapshot time; suppressed == dropped under backpressure);
+  + pf.cancelled_resident + pf.shard_down + pf.issued + pf.queued``
+  (queued == still staged at snapshot time; suppressed == dropped under
+  backpressure; shard_down == cancelled because the target shard died);
 * **prefetch timeliness**:  ``pf.channel_scheduled == pf.timely + pf.late
   + pf.unused + pf.eta_overwritten + pf.eta_pending``  (every id put on
   the modeled channel is eventually demanded timely/late, never demanded,
@@ -29,7 +30,11 @@ Identities (see docs/architecture.md for the derivations):
 * **admission**:  ``adm.admitted == adm.served + adm.shed + adm.degraded``
   (every request has exactly one fate), and each ``adm.class.<name>.*``
   sub-namespace both closes the same identity and sums to the totals;
-* **sharded**:  aggregate ``store.*`` == sum over ``shard.<i>.store.*``.
+* **sharded**:  aggregate ``store.*`` == sum over ``shard.<i>.store.*``;
+* **fault tolerance**:  ``ft.served == ft.primary + ft.failover_replica
+  + ft.failover_degraded`` and ``ft.retries == ft.retry_succeeded +
+  ft.retry_exhausted``  (every routed row has one answer source, every
+  retry episode ends one way — see :func:`check_ft`).
 
 The trace cross-check (:func:`check_trace_vs_metrics`) closes the loop
 between the two observability surfaces: per-batch span args summed over
@@ -84,11 +89,13 @@ def check_prefetch(flat: Mapping[str, Any], prefix: str = "rt") -> List[str]:
     fate = (_get(flat, f"{prefix}.pf.suppressed")
             + _get(flat, f"{prefix}.pf.deduped")
             + _get(flat, f"{prefix}.pf.cancelled_resident")
+            + _get(flat, f"{prefix}.pf.shard_down")
             + _get(flat, f"{prefix}.pf.issued")
             + _get(flat, f"{prefix}.pf.queued"))
     if abs(sub - fate) > _EPS:
         p.append(f"{prefix}: pf.submitted({sub:g}) != suppressed + deduped "
-                 f"+ cancelled_resident + issued + queued ({fate:g})")
+                 f"+ cancelled_resident + shard_down + issued + queued "
+                 f"({fate:g})")
     sched = _get(flat, f"{prefix}.pf.channel_scheduled")
     acct = (_get(flat, f"{prefix}.pf.timely")
             + _get(flat, f"{prefix}.pf.late")
@@ -155,6 +162,59 @@ def check_admission(flat: Mapping[str, Any],
     return p
 
 
+def check_ft(flat: Mapping[str, Any], prefix: str = "ft") -> List[str]:
+    """Fault-tolerance accounting: every row routed while the fault layer
+    is armed has exactly one answer source, and every retry episode ends
+    exactly one way.
+
+    * ``ft.served == ft.primary + ft.failover_replica +
+      ft.failover_degraded``;
+    * ``ft.retries == ft.retry_succeeded + ft.retry_exhausted``;
+    * ``ft.degraded_default <= ft.failover_degraded`` (the zero-default
+      rows are a subset of the degraded answers);
+    * ``ft.recoveries <= ft.kills`` (a shard can only recover after a
+      kill) and ``ft.recovery_bytes <= ft.recovery_bytes_raw`` (int8
+      transfer never inflates the payload).
+    """
+    if not _has_any(flat, prefix):
+        return []
+    p: List[str] = []
+    served = _get(flat, f"{prefix}.served")
+    src = (_get(flat, f"{prefix}.primary")
+           + _get(flat, f"{prefix}.failover_replica")
+           + _get(flat, f"{prefix}.failover_degraded"))
+    if abs(served - src) > _EPS:
+        p.append(f"{prefix}: served({served:g}) != primary + "
+                 f"failover_replica + failover_degraded ({src:g})")
+    retries = _get(flat, f"{prefix}.retries")
+    ended = (_get(flat, f"{prefix}.retry_succeeded")
+             + _get(flat, f"{prefix}.retry_exhausted"))
+    if abs(retries - ended) > _EPS:
+        p.append(f"{prefix}: retries({retries:g}) != retry_succeeded + "
+                 f"retry_exhausted ({ended:g})")
+    dd = _get(flat, f"{prefix}.degraded_default")
+    deg = _get(flat, f"{prefix}.failover_degraded")
+    if dd > deg + _EPS:
+        p.append(f"{prefix}: degraded_default({dd:g}) > "
+                 f"failover_degraded({deg:g})")
+    kills = _get(flat, f"{prefix}.kills")
+    recov = _get(flat, f"{prefix}.recoveries")
+    if recov > kills + _EPS:
+        p.append(f"{prefix}: recoveries({recov:g}) > kills({kills:g})")
+    rb = _get(flat, f"{prefix}.recovery_bytes")
+    rbr = _get(flat, f"{prefix}.recovery_bytes_raw")
+    if rb > rbr + _EPS:
+        p.append(f"{prefix}: recovery_bytes({rb:g}) > "
+                 f"recovery_bytes_raw({rbr:g})")
+    for k in ("served", "primary", "failover_replica", "failover_degraded",
+              "retries", "retry_succeeded", "retry_exhausted", "kills",
+              "recoveries", "recovery_rows", "recovery_chunks",
+              "recovery_bytes", "recovery_bytes_raw", "staged_dropped"):
+        if _get(flat, f"{prefix}.{k}") < -_EPS:
+            p.append(f"{prefix}.{k} is negative")
+    return p
+
+
 _SHARD_RE = re.compile(r"^shard\.(\d+)\.")
 
 
@@ -183,7 +243,7 @@ def check_all(flat: Mapping[str, Any]) -> List[str]:
     """All identities over one flat metrics mapping; empty == reconciled."""
     return (check_store(flat) + check_prefetch(flat)
             + check_pipeline(flat) + check_admission(flat)
-            + check_sharded(flat))
+            + check_sharded(flat) + check_ft(flat))
 
 
 # ---------------- trace <-> metrics cross-check ----------------

@@ -7,6 +7,8 @@ from repro.runtime.admission import (PRIORITY_CLASSES, AdmissionConfig,
 from repro.runtime.clock import Clock, VirtualClock, WallClock
 from repro.runtime.drift import (AdaptiveController, DriftConfig,
                                  DriftDetector)
+from repro.runtime.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  FtStats, TransientFetchError)
 from repro.runtime.pipeline import (MicroBatcher, PipelinedRuntime, Request,
                                     RuntimeConfig)
 from repro.runtime.prefetch_engine import (PrefetchEngine,
@@ -18,6 +20,8 @@ __all__ = [
     "AdmissionStats",
     "Clock", "VirtualClock", "WallClock",
     "AdaptiveController", "DriftConfig", "DriftDetector",
+    "FaultEvent", "FaultInjector", "FaultPlan", "FtStats",
+    "TransientFetchError",
     "MicroBatcher", "PipelinedRuntime", "Request", "RuntimeConfig",
     "PrefetchEngine", "heuristic_prediction_stream",
     "RuntimeTelemetry", "latency_percentiles",

@@ -98,6 +98,7 @@ class PrefetchEngine:
         self._pf_eta: Dict[int, float] = {}   # key -> modeled completion us
         self._channel_free_us = 0.0           # background fetch channel
         self._backpressure = False            # admission-control signal
+        self._down = False                    # target shard dead (failover)
         self._closed = False
         self._worker_exc = None               # thread-mode failure, if any
         if scheduler == "thread":
@@ -127,6 +128,13 @@ class PrefetchEngine:
         pf = np.asarray(prefetch_ids, np.int64).ravel()
         tel = self.telemetry
         tel.pf_submitted += int(pf.size)
+        if self._down:
+            # Target shard is dead (failover): nothing can be populated or
+            # ranked there.  The whole item is cancelled with its own fate
+            # (``pf.shard_down`` extends the submitted identity) rather
+            # than raising into the serving path or vanishing uncounted.
+            tel.pf_shard_down += int(pf.size)
+            return
         if self._backpressure and pf.size:
             # Admission-control pressure: the serving queue is backed up,
             # so background prefetch traffic would only steal slow-tier
@@ -300,6 +308,36 @@ class PrefetchEngine:
         self._inflight.difference_update(np.asarray(pf).tolist())
 
     # ---------------- demand-side hooks ----------------
+
+    def set_down(self, down: bool):
+        """Shard health signal from the failover layer.
+
+        Going down cancels every in-flight work item for the dead shard —
+        queued prefetch rows take the distinct ``pf.shard_down`` fate
+        (extending the submitted identity) and undemanded channel ETAs
+        fold into ``pf.unused`` — so a drain-after-kill is a safe no-op
+        instead of a populate call on a dead store.  While down, newly
+        submitted items are cancelled the same way at submit time.  Going
+        back up re-opens submission; recovery repopulation then arrives
+        as ordinary submit traffic.
+        """
+        down = bool(down)
+        if down and not self._down:
+            self._cancel_inflight()
+        self._down = down
+
+    def _cancel_inflight(self):
+        tel = self.telemetry
+        if self._q is not None:
+            self.drain()  # thread mode: barrier — applied work stands
+        else:
+            items, self._pending = self._pending, []
+            for it in items:
+                tel.pf_shard_down += int(it.prefetch.size)
+        with self.lock:
+            self._inflight.clear()
+        tel.pf_unused += len(self._pf_eta)
+        self._pf_eta.clear()
 
     def set_backpressure(self, on: bool):
         """Admission-control signal: while on, newly submitted prefetch

@@ -52,6 +52,7 @@ class RuntimeTelemetry:
     pf_suppressed: int = 0         # dropped at submit: backpressure on
     pf_deduped: int = 0            # dropped: already queued in-flight
     pf_cancelled_resident: int = 0  # dropped at issue: became resident
+    pf_shard_down: int = 0         # cancelled: target shard died (failover)
     pf_issued: int = 0             # rows actually populated
     pf_populate_calls: int = 0     # coalesced batched populate calls
     pf_timely: int = 0             # modeled completion <= demand time
@@ -103,6 +104,7 @@ class RuntimeTelemetry:
             "pf_suppressed": self.pf_suppressed,
             "pf_deduped": self.pf_deduped,
             "pf_cancelled_resident": self.pf_cancelled_resident,
+            "pf_shard_down": self.pf_shard_down,
             "pf_issued": self.pf_issued,
             "pf_populate_calls": self.pf_populate_calls,
             "pf_timely": self.pf_timely, "pf_late": self.pf_late,
@@ -126,7 +128,8 @@ class RuntimeTelemetry:
     def merge(self, other: "RuntimeTelemetry") -> "RuntimeTelemetry":
         for f in ("batches", "requests", "pf_submitted", "pf_suppressed",
                   "pf_deduped",
-                  "pf_cancelled_resident", "pf_issued", "pf_populate_calls",
+                  "pf_cancelled_resident", "pf_shard_down",
+                  "pf_issued", "pf_populate_calls",
                   "pf_timely", "pf_late", "pf_unused",
                   "pf_channel_scheduled", "pf_eta_overwritten",
                   "rank_cancelled_evicted"):
@@ -149,6 +152,7 @@ class RuntimeTelemetry:
             ("pf.suppressed", self.pf_suppressed),
             ("pf.deduped", self.pf_deduped),
             ("pf.cancelled_resident", self.pf_cancelled_resident),
+            ("pf.shard_down", self.pf_shard_down),
             ("pf.issued", self.pf_issued),
             ("pf.populate_calls", self.pf_populate_calls),
             ("pf.timely", self.pf_timely), ("pf.late", self.pf_late),

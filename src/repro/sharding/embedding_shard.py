@@ -61,6 +61,11 @@ class ShardPlan:
     local_of: np.ndarray        # (n_vectors,) int64: global id -> local row
     global_ids: List[np.ndarray]  # per shard: local row -> global id
     capacities: np.ndarray      # (n_shards,) int64: fast-tier rows
+    # Hot-row replication (RecShard's CDF lever): the top-k rows by
+    # profiled frequency, resident on *every* shard in addition to their
+    # home shard.  None/empty == no replication.  The facade serves a
+    # dead shard's replicated rows from this set with exact bytes.
+    replicated_ids: Optional[np.ndarray] = None
 
     @property
     def n_vectors(self) -> int:
@@ -88,6 +93,17 @@ class ShardPlan:
             assert 1 <= self.capacities[s] <= max(len(g), 1)
             seen += len(g)
         assert seen == self.n_vectors
+        if self.replicated_ids is not None and len(self.replicated_ids):
+            r = self.replicated_ids
+            assert np.all(np.diff(r) > 0)  # sorted ascending, unique
+            assert 0 <= r[0] and r[-1] < self.n_vectors
+
+    def replica_mask(self) -> np.ndarray:
+        """(n_vectors,) bool: True where the row is hot-replicated."""
+        m = np.zeros(self.n_vectors, bool)
+        if self.replicated_ids is not None:
+            m[self.replicated_ids] = True
+        return m
 
 
 def trace_frequencies(global_ids: np.ndarray, n_vectors: int,
@@ -102,7 +118,8 @@ def trace_frequencies(global_ids: np.ndarray, n_vectors: int,
 def make_plan(rows_per_table: Sequence[int], n_shards: int, capacity: int,
               placement: str = "table",
               frequencies: Optional[np.ndarray] = None,
-              fast_weights: Optional[Sequence[float]] = None) -> ShardPlan:
+              fast_weights: Optional[Sequence[float]] = None,
+              replicate_hot: int = 0) -> ShardPlan:
     """Build a :class:`ShardPlan`.
 
     ``capacity`` is the *total* fast-tier row budget across shards, split
@@ -110,6 +127,13 @@ def make_plan(rows_per_table: Sequence[int], n_shards: int, capacity: int,
     table/row/hash, uniform for freq) with a one-row floor per shard.
     ``frequencies`` (required for ``"freq"``) are per-global-id access
     counts, e.g. from :func:`trace_frequencies`.
+
+    ``replicate_hot`` marks the top-k rows by ``frequencies`` (required
+    when k > 0) as replicated on every shard: RecShard's per-table CDFs
+    show a tiny hot set covers most traffic, which is exactly the set
+    that must stay answerable from survivors when a shard dies.  Routing
+    is unchanged (each row keeps one home shard); ``replicated_ids`` is
+    the failover layer's exact-answer set.
     """
     if placement not in PLACEMENTS:
         raise ValueError(f"unknown placement {placement!r}; "
@@ -182,8 +206,23 @@ def make_plan(rows_per_table: Sequence[int], n_shards: int, capacity: int,
         global_ids.append(g)
     caps = np.minimum(caps, np.asarray([max(len(g), 1)
                                         for g in global_ids], np.int64))
+
+    replicated = None
+    if replicate_hot > 0:
+        if frequencies is None:
+            raise ValueError("replicate_hot needs per-row frequencies "
+                             "(see trace_frequencies)")
+        freq = np.asarray(frequencies, np.float64).ravel()
+        if len(freq) != n_vectors:
+            raise ValueError(f"frequencies cover {len(freq)} rows, "
+                             f"tables hold {n_vectors}")
+        k = min(int(replicate_hot), n_vectors)
+        # Same stable hotness order as _assign_freq: frequency descending,
+        # global id ascending — the replica set is deterministic.
+        hot_order = np.lexsort((np.arange(n_vectors), -freq))
+        replicated = np.sort(hot_order[:k]).astype(np.int64)
     return ShardPlan(placement, n_shards, shard_of.astype(np.int32),
-                     local_of, global_ids, caps)
+                     local_of, global_ids, caps, replicated_ids=replicated)
 
 
 def _pack_tables(rows: np.ndarray, n_shards: int) -> np.ndarray:

@@ -8,6 +8,9 @@ replay used by the scenario regression matrix and the benchmarks.
 """
 from repro.workloads import regimes as _regimes  # noqa: F401  (registers)
 from repro.workloads import replay as _replay  # noqa: F401  (registers)
+from repro.workloads.chaos import (CHAOS_KEYS, DEFAULT_FAULT_PLAN,
+                                   chaos_sweep, failover_goodput,
+                                   replay_chaos)
 from repro.workloads.harness import (GOLDEN_KEYS, build_store,
                                      golden_metrics, phase_steady_hit_rates,
                                      replay_scenario)
@@ -19,10 +22,12 @@ from repro.workloads.spec import (DRIFT_SCENARIOS, PAPER_TARGET_SCENARIOS,
                                   parse_workload, scenario)
 
 __all__ = [
-    "DRIFT_SCENARIOS", "GOLDEN_KEYS", "OVERLOAD_KEYS",
+    "CHAOS_KEYS", "DEFAULT_FAULT_PLAN", "DRIFT_SCENARIOS", "GOLDEN_KEYS",
+    "OVERLOAD_KEYS",
     "PAPER_TARGET_SCENARIOS", "REGIMES", "SCENARIOS", "WorkloadSpec",
-    "build_store", "degradation_ratio", "golden_metrics", "iter_batches",
+    "build_store", "chaos_sweep", "degradation_ratio", "failover_goodput",
+    "golden_metrics", "iter_batches",
     "make_spec", "make_trace", "overload_sweep", "parse_workload",
-    "phase_steady_hit_rates", "replay_overload", "replay_scenario",
-    "scenario",
+    "phase_steady_hit_rates", "replay_chaos", "replay_overload",
+    "replay_scenario", "scenario",
 ]

@@ -144,6 +144,28 @@ def sustained_overload(spec: WorkloadSpec, rng) -> tuple:
     return table_id, np.where(is_hot, hot_rows, base_rows)
 
 
+@register("shard_failure", params=("zipf_a", "hot_frac", "p_hot"))
+def shard_failure(spec: WorkloadSpec, rng) -> tuple:
+    """Traffic for the shard-failover chaos runs: a stationary zipf
+    baseline with a *steady* concentrated hot set (``hot_frac`` of each
+    table, hit with probability ``p_hot``) — the RecShard-CDF shape that
+    makes hot-row replication the failover lever: when a shard dies
+    mid-run, the replicated top-k keeps most of this traffic exactly
+    answerable from survivors.  The fault timeline itself is not in the
+    trace; it rides on the serving harness (:mod:`repro.workloads.chaos`)
+    as a :class:`~repro.runtime.faults.FaultPlan`."""
+    n, R = spec.n_accesses, spec.rows_per_table
+    table_id = _tables(spec, rng, n)
+    ranks = _zipf_ranks(rng, float(spec.param("zipf_a", 1.1)), R, n)
+    salt = rng.integers(0, 2**31, size=spec.n_tables)
+    base_rows = _permute(ranks, salt[table_id], R)
+    hot = max(1, int(float(spec.param("hot_frac", 0.03)) * R))
+    h_ranks = _zipf_ranks(rng, 1.3, hot, n)
+    hot_rows = _permute(h_ranks, salt[table_id] ^ 0x7F4A7C15, R)
+    is_hot = rng.random(n) < float(spec.param("p_hot", 0.6))
+    return table_id, np.where(is_hot, hot_rows, base_rows)
+
+
 @register("churn", params=("zipf_a", "churn_per_k"))
 def churn(spec: WorkloadSpec, rng) -> tuple:
     """Popularity-decay churn: zipf over a *sliding* rank window — the

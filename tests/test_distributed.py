@@ -10,6 +10,7 @@ from repro.distributed.compression import (compress_tree, dequantize_int8,
                                            make_compressed_dp_grads,
                                            quantize_int8)
 from repro.distributed.fault_tolerance import (ElasticMesh, Heartbeat,
+                                               RetryDeadlineExceeded,
                                                StragglerMonitor, retry_step)
 
 
@@ -65,12 +66,71 @@ def test_retry_step():
                    retries=1, backoff_s=0.001)
 
 
+def test_retry_step_injectable_clock_and_backoff():
+    pauses = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_step(flaky, retries=5, backoff_s=1.0,
+                      sleep=pauses.append, now=lambda: 0.0) == "ok"
+    assert pauses == [1.0, 2.0, 4.0]  # exponential, no wall sleep
+
+
+def test_retry_step_fatal_errors_are_not_retried():
+    calls = {"n": 0}
+
+    def broken():
+        calls["n"] += 1
+        raise ValueError("logic bug")
+
+    with pytest.raises(ValueError):
+        retry_step(broken, retries=5, backoff_s=1.0,
+                   retryable=(RuntimeError,), sleep=lambda s: None)
+    assert calls["n"] == 1  # first raise propagates, zero retries
+
+
+def test_retry_step_deadline_bounds_the_episode():
+    t = {"now": 0.0}
+
+    def sleep(s):
+        t["now"] += s
+
+    def always_fails():
+        raise RuntimeError("transient")
+
+    with pytest.raises(RetryDeadlineExceeded) as ei:
+        retry_step(always_fails, retries=100, backoff_s=1.0,
+                   retryable=(RuntimeError,), sleep=sleep,
+                   now=lambda: t["now"], deadline_s=5.0)
+    # 1 + 2 slept; the next 4s backoff would land past 5s -> raise, and
+    # the underlying error rides along as the cause.
+    assert t["now"] == 3.0
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert isinstance(ei.value, TimeoutError)  # admission code catches this
+
+
 def test_straggler_monitor():
     mon = StragglerMonitor(warmup=5)
     for i in range(30):
         slow = mon.record(i, 0.1)
         assert not slow
     assert mon.record(31, 5.0)  # 50x outlier flagged
+    assert mon.summary()["stragglers"] == 1
+
+
+def test_straggler_record_since_uses_injected_clock():
+    ticks = iter([float(i) for i in range(20)] + [120.0])
+    mon = StragglerMonitor(warmup=5, clock=lambda: next(ticks))
+    assert not mon.record_since(0)  # first call only arms the clock
+    assert mon.n == 0
+    flagged = [mon.record_since(i) for i in range(1, 20)]
+    assert not any(flagged)         # steady 1s cadence, no outliers
+    assert mon.record_since(20)     # 100s gap -> flagged
     assert mon.summary()["stragglers"] == 1
 
 
@@ -85,3 +145,22 @@ def test_heartbeat(tmp_path):
     import json
 
     assert json.loads((tmp_path / "hb.json").read_text())["step"] == 5
+
+
+def test_heartbeat_cadence_on_virtual_clock(tmp_path):
+    import json
+
+    t = {"now": 0.0}
+    hb = Heartbeat(tmp_path / "hb.json", every_s=10.0,
+                   clock=lambda: t["now"])
+    hb.beat(0)  # first beat always writes, even with a long cadence
+    assert json.loads((tmp_path / "hb.json").read_text())["step"] == 0
+    t["now"] = 5.0
+    hb.beat(1)  # inside the cadence window: suppressed
+    assert json.loads((tmp_path / "hb.json").read_text())["step"] == 0
+    t["now"] = 12.0
+    hb.beat(2)
+    assert json.loads((tmp_path / "hb.json").read_text())["step"] == 2
+    # Atomic publish: the temp file never survives a completed beat.
+    assert not (tmp_path / "hb.tmp").exists()
+    assert list(tmp_path.iterdir()) == [tmp_path / "hb.json"]

@@ -1,0 +1,414 @@
+"""Deterministic fault injection + shard failover.
+
+Covers the plan grammar, the injector state machine, hot-row replication
+planning, the engine's drain-after-kill contract, and — the point of the
+layer — the failover contract on every serving surface (sync loop,
+pipelined runtime, admission-controlled runtime):
+
+* **zero wrong answers**: every served row is byte-identical to the
+  host value for its id, or the all-zero degraded default;
+* **exact ``ft.*`` reconciliation** (``served == primary + replica +
+  degraded``; ``retries == succeeded + exhausted``);
+* **bounded stall**: a dead shard contributes nothing to the critical
+  path and retry episodes never outlast their deadline;
+* **byte determinism**: the same plan over the same trace twice gives
+  identical outputs and counters.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sharded_serving import ShardedTieredStore
+from repro.core.tiered import TieredEmbeddingStore
+from repro.obs import MetricsRegistry
+from repro.obs.reconcile import check_ft, reconcile
+from repro.runtime.admission import AdmissionConfig
+from repro.runtime.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  FtStats)
+from repro.runtime.pipeline import PipelinedRuntime, RuntimeConfig
+from repro.runtime.prefetch_engine import PrefetchEngine
+from repro.runtime.telemetry import RuntimeTelemetry
+from repro.sharding.embedding_shard import make_plan
+from repro.workloads import make_spec, replay_chaos
+
+EMPTY = np.empty(0, np.int64)
+ROWS = [96, 64, 96, 64]
+N_VEC = sum(ROWS)
+
+
+def _host(n=N_VEC, d=8, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _ids(n_acc=3072, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.minimum(rng.zipf(1.15, size=n_acc), N_VEC) - 1
+    return rng.permutation(N_VEC)[ranks].astype(np.int64)
+
+
+# ---------------- plan grammar ----------------
+
+
+def test_plan_parse_grammar():
+    p = FaultPlan.parse("kill:1@mid,recover:1@75%,slow:0x4@25%..75%,"
+                        "flaky:2x0.3@10..40,kill@5000us", seed=7)
+    kinds = [e.kind for e in p.events]
+    assert kinds == ["kill", "recover", "slow", "flaky", "kill"]
+    assert p.events[0].frac and p.events[0].at == 0.5
+    assert p.events[2].factor == 4.0 and p.events[2].until == 0.75
+    assert p.events[3].at == 10 and p.events[3].until == 40
+    assert p.events[4].shard == 0 and p.events[4].unit == "us"
+    assert p.seed == 7 and p.needs_horizon
+    # flaky factor defaults to 0.5, kill/recover to 1.0
+    assert FaultPlan.parse("flaky:1@0..9").events[0].factor == 0.5
+    assert not FaultPlan.parse("kill:1@3").needs_horizon
+
+
+@pytest.mark.parametrize("text", [
+    "kill:1@mid,recover:1@75%", "slow:0x4@25%..75%",
+    "flaky:2x0.4@10..40", "kill@5000us", "recover:3@end",
+])
+def test_plan_describe_round_trips(text):
+    p = FaultPlan.parse(text)
+    assert FaultPlan.parse(p.describe()).events == p.events
+
+
+@pytest.mark.parametrize("bad", [
+    "explode:1@5",          # unknown kind
+    "slow:0x0.5@1..3",      # slow factor < 1
+    "flaky:0x1.5@1..3",     # probability > 1
+    "slow:0x2@10..50%",     # mixed time units in one window
+    "kill:1",               # no @time
+    "kill:1@",              # empty time
+])
+def test_plan_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+# ---------------- injector state machine ----------------
+
+
+def test_injector_timeline_transitions():
+    plan = FaultPlan.parse("kill:1@2,slow:0x3@3..6,flaky:1x1.0@4..7,"
+                           "recover:1@5")
+    inj = FaultInjector(plan, n_shards=2)
+    assert inj.armed and inj.up.all()
+    assert inj.poll(0, 0.0) == [] and inj.poll(1, 0.0) == []
+    fired = inj.poll(2, 100.0)
+    assert [(e.kind, clear) for e, clear in fired] == [("kill", False)]
+    assert not inj.up[1] and inj.slow[0] == 1.0
+    inj.poll(3, 200.0)
+    assert inj.slow[0] == 3.0
+    fired = inj.poll(5, 500.0)   # batch 4 skipped: flaky + recover both due
+    kinds = [(e.kind, clear) for e, clear in fired]
+    assert ("flaky", False) in kinds and ("recover", False) in kinds
+    assert inj.up[1] and inj.flaky[1] == 1.0
+    inj.poll(7, 900.0)           # windows clear
+    assert inj.slow[0] == 1.0 and inj.flaky[1] == 0.0
+    assert not inj.armed
+    # Killing an already-dead shard / recovering a live one are no-ops.
+    inj2 = FaultInjector(FaultPlan.parse("kill:0@1,kill:0@2,recover:1@3"),
+                         n_shards=2)
+    assert len(inj2.poll(2, 0.0)) == 1
+    assert inj2.poll(3, 0.0) == []
+
+
+def test_injector_horizon_resolution():
+    plan = FaultPlan.parse("kill:1@mid,recover:1@75%")
+    with pytest.raises(ValueError, match="horizon"):
+        FaultInjector(plan, n_shards=2)
+    inj = FaultInjector(plan, n_shards=2, horizon_batches=20)
+    assert [e.at for e in inj.events_resolved()] == [10.0, 15.0]
+    with pytest.raises(ValueError, match="shard"):
+        FaultInjector(FaultPlan.parse("kill:5@1"), n_shards=2)
+
+
+def test_injector_downtime_accounting():
+    inj = FaultInjector(FaultPlan.parse("kill:0@1"), n_shards=1)
+    assert inj.down_time_us(0, 999.0) == 0.0   # never killed
+    inj.poll(1, 100.0)
+    assert inj.down_time_us(0, 400.0) == 300.0
+    assert inj.close_downtime(0, 450.0) == 350.0
+    assert inj.down_time_us(0, 500.0) == 0.0   # window closed exactly once
+
+
+def test_injector_draws_are_seeded():
+    def draws(seed):
+        inj = FaultInjector(FaultPlan.parse("flaky:0x0.5@0..99", seed=seed),
+                            n_shards=1)
+        inj.poll(0, 0.0)
+        return [inj.draw_failure(0) for _ in range(64)]
+
+    assert draws(3) == draws(3)
+    assert draws(3) != draws(4)
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("kill", shard=-1, at=0)
+    with pytest.raises(ValueError):
+        FaultEvent("slow", shard=0, at=0, factor=0.5)
+
+
+# ---------------- ft.* namespace ----------------
+
+
+def test_ft_stats_identities_and_reconcile():
+    ft = FtStats(n_shards=2, served=10, primary=6, failover_replica=3,
+                 failover_degraded=1, degraded_default=1, retries=2,
+                 retry_succeeded=1, retry_exhausted=1, kills=1, recoveries=1,
+                 recovery_bytes=10, recovery_bytes_raw=40)
+    ft.check()
+    reg = MetricsRegistry()
+    ft.publish(reg)
+    flat = dict(reg.as_dict())
+    assert check_ft(flat) == []
+    assert reg.snapshot()["gauges"]["ft.shard.0.down_ms"] == 0.0
+    # Every identity trips when its counters drift.
+    for key, delta in [("ft.served", 1), ("ft.retry_succeeded", 5),
+                       ("ft.degraded_default", 9), ("ft.kills", -1),
+                       ("ft.recovery_bytes", 100)]:
+        broken = dict(flat)
+        broken[key] += delta
+        assert check_ft(broken), key
+    ft.served += 1
+    with pytest.raises(AssertionError):
+        ft.check()
+
+
+# ---------------- engine drain-after-kill ----------------
+
+
+def test_engine_set_down_cancels_inflight_and_drops_new():
+    store = TieredEmbeddingStore(_host(), 64)
+    tel = RuntimeTelemetry()
+    eng = PrefetchEngine(store, telemetry=tel)
+    eng.submit(EMPTY, EMPTY, np.array([1, 2, 3]))     # in flight
+    eng.set_down(True)                                # kill mid-flight
+    assert tel.pf_shard_down == 3 and store.n_resident == 0
+    eng.submit(EMPTY, EMPTY, np.array([4, 5]))        # dropped at the door
+    assert tel.pf_shard_down == 5 and tel.pf_issued == 0
+    eng.drain()                                       # must not crash/refill
+    assert store.n_resident == 0
+    # All submitted traffic is fate-accounted.
+    assert tel.pf_submitted == (tel.pf_suppressed + tel.pf_deduped
+                                + tel.pf_cancelled_resident
+                                + tel.pf_shard_down + tel.pf_issued)
+    eng.set_down(False)                               # recovery
+    eng.submit(EMPTY, EMPTY, np.array([6, 7]))
+    eng.drain()
+    assert store.n_resident == 2 and tel.pf_issued == 2
+
+
+# ---------------- replication planning ----------------
+
+
+def test_make_plan_replicates_hottest_rows():
+    freq = np.zeros(N_VEC, np.int64)
+    hot = np.array([5, 17, 200, 311])
+    freq[hot] = [40, 30, 20, 10]
+    plan = make_plan(ROWS, 4, 64, "row", frequencies=freq, replicate_hot=4)
+    assert np.array_equal(plan.replicated_ids, np.sort(hot))
+    plan.check()
+    mask = plan.replica_mask()
+    assert mask.sum() == 4 and mask[hot].all()
+    # Ties broken by id: with uniform frequencies the first k ids win.
+    p2 = make_plan(ROWS, 2, 64, "row",
+                   frequencies=np.ones(N_VEC, np.int64), replicate_hot=3)
+    assert p2.replicated_ids.tolist() == [0, 1, 2]
+
+
+def test_make_plan_replicate_requires_frequencies():
+    with pytest.raises(ValueError, match="frequencies"):
+        make_plan(ROWS, 2, 64, "row", replicate_hot=4)
+
+
+# ---------------- failover contract: sync surface ----------------
+
+
+def _small_spec():
+    return make_spec("shard_failure", n_accesses=10_240, n_tables=4,
+                     rows_per_table=256)
+
+
+def test_chaos_kill_zero_wrong_answers():
+    res = replay_chaos(_small_spec(), batch=128, shards=4,
+                       fault_plan="kill:1@mid,recover:1@75%")
+    assert res["wrong_rows"] == 0
+    assert res["kills"] == 1 and res["recoveries"] == 1
+    assert res["failover_replica"] > 0          # replication carried load
+    assert res["served"] == (res["primary"] + res["failover_replica"]
+                             + res["failover_degraded"])
+    assert res["recovery_pending"] == 0          # streaming finished
+    assert 0 < res["recovery_bytes"] < res["recovery_bytes_raw"]
+    assert res["exact_rows"] + res["zero_default_rows"] == res["rows"]
+
+
+def test_chaos_flaky_and_slow_reconcile():
+    res = replay_chaos(_small_spec(), batch=128, shards=4, seed=11,
+                       fault_plan="flaky:2x0.6@25%..75%,slow:0x3@25%..75%")
+    assert res["wrong_rows"] == 0
+    assert res["retries"] > 0
+    ft = {k[3:]: v for k, v in res["metrics"]["counters"].items()
+          if k.startswith("ft.")}
+    assert ft["retries"] == ft["retry_succeeded"] + ft["retry_exhausted"]
+    # Bounded stall: no retry episode outlasts its deadline + final
+    # timeout, so total overhead is linear in episode count.
+    plan = FaultPlan()
+    assert ft["retry_overhead_ms"] <= ft["retries"] * 1e-3 * (
+        plan.retry_deadline_us + plan.retry_timeout_us)
+    assert ft["slow_ms"] > 0
+
+
+def test_chaos_double_run_byte_determinism():
+    kw = dict(batch=128, shards=4, fault_plan="kill:1@mid,recover:1@75%")
+    a = replay_chaos(_small_spec(), **kw)
+    b = replay_chaos(_small_spec(), **kw)
+    for k in set(a) - {"metrics"}:
+        assert a[k] == b[k], k
+    # Everything but measured wall time (time.*_s) is byte-deterministic.
+    ca, cb = a["metrics"]["counters"], b["metrics"]["counters"]
+    assert {k: v for k, v in ca.items() if ".time." not in k} \
+        == {k: v for k, v in cb.items() if ".time." not in k}
+
+
+def test_chaos_clean_arm_has_no_ft_traffic():
+    res = replay_chaos(_small_spec(), batch=128, shards=4, fault_plan=None)
+    assert res["failover_replica"] == 0 and res["wrong_rows"] == 0
+    assert not any(k.startswith("ft.") for k in res["metrics"]["counters"])
+
+
+def test_chaos_kill_without_recovery_keeps_serving():
+    # No recovery ever comes: replicas + degraded rows carry the tail of
+    # the run, and the dead shard contributes nothing to the critical
+    # path (the run can only get *faster*, never hang).
+    clean = replay_chaos(_small_spec(), batch=128, shards=4, fault_plan=None)
+    res = replay_chaos(_small_spec(), batch=128, shards=4,
+                       fault_plan="kill:1@25%")
+    assert res["wrong_rows"] == 0 and res["recoveries"] == 0
+    assert res["modeled_s"] <= clean["modeled_s"] * 1.01
+
+
+# ---------------- failover contract: pipelined / admission ----------
+
+
+def _drive_runtime(fault_plan, admission=None, n_q=96, per_query=8):
+    """Drive a sharded faulted store through PipelinedRuntime; returns
+    per-batch (ids, emb) captures plus the runtime and store."""
+    gid = _ids(n_q * per_query)
+    store = ShardedTieredStore.build(
+        _host(), ROWS, 4, "row", capacity=64, policy="lru",
+        profile_ids=gid[: len(gid) // 4], replicate_hot=32, warmup_batch=32)
+    if fault_plan:
+        store.arm_faults(fault_plan, horizon_batches=n_q * per_query // 32)
+    cfg = RuntimeConfig(max_batch=4, pipeline_depth=2, interarrival_us=30.0,
+                        compute_us=200.0, admission=admission)
+    rt = PipelinedRuntime(store, cfg)
+    embs, idss = {}, {}
+
+    def hook(ids, hits, b):
+        idss[b] = np.asarray(ids).copy()
+        return [(EMPTY, EMPTY, np.unique(ids))]
+
+    rt._batch_hook = hook
+
+    def step(b, emb):
+        embs[b] = np.asarray(emb).copy()
+        return (0.0, [])
+
+    if admission is not None:
+        pri = np.random.default_rng(1).integers(0, admission.n_classes,
+                                                size=n_q)
+        stream = ((gid[q * per_query: (q + 1) * per_query], int(pri[q]))
+                  for q in range(n_q))
+    else:
+        stream = (gid[q * per_query: (q + 1) * per_query]
+                  for q in range(n_q))
+    rt.run(stream, step)
+    return store, rt, idss, embs
+
+
+def _audit_rows(host, idss, embs):
+    """Every served row must be the host row bit-for-bit or the all-zero
+    degraded default; returns (exact, zero) counts."""
+    exact = zero = 0
+    for b, emb in embs.items():
+        ref = host[idss[b]]
+        eq = np.all(emb == ref, axis=-1)
+        z = np.all(emb == 0.0, axis=-1)
+        assert int(np.count_nonzero(~(eq | z))) == 0, f"wrong rows, batch {b}"
+        exact += int(np.count_nonzero(eq))
+        zero += int(np.count_nonzero(z & ~eq))
+    return exact, zero
+
+
+@pytest.mark.parametrize("admission", [
+    None,
+    AdmissionConfig(queue_bound=16, class_deadline_us=(2e3, 8e3, 3.2e4)),
+], ids=["pipelined", "admission"])
+def test_failover_contract_on_runtime_surface(admission):
+    plan = "kill:1@6,recover:1@14"
+    store, rt, idss, embs = _drive_runtime(plan, admission=admission)
+    exact, zero = _audit_rows(store._host, idss, embs)
+    assert exact > 0
+    ft = store.ft_stats
+    ft.check()
+    assert ft.kills == 1 and ft.recoveries == 1
+    assert ft.failover_replica > 0
+    reg = MetricsRegistry()
+    rt.publish(reg)
+    store.publish_metrics(reg)
+    assert reconcile(metrics=reg.as_dict(), strict=False) == []
+
+
+def test_runtime_surface_double_run_determinism():
+    def run():
+        store, rt, idss, embs = _drive_runtime("kill:1@6,recover:1@14")
+        blob = np.concatenate([embs[b].ravel() for b in sorted(embs)])
+        return blob, store.ft_stats.as_dict(), rt.clock.now()
+
+    a, b = run(), run()
+    assert np.array_equal(a[0], b[0])
+    assert a[1] == b[1] and a[2] == b[2]
+
+
+def test_runtime_no_fault_path_is_byte_identical():
+    # Arming nothing must not perturb the pre-fault-layer runtime.
+    _, rt0, _, embs0 = _drive_runtime(None)
+    _, rt1, _, embs1 = _drive_runtime("")
+    for b in embs0:
+        assert np.array_equal(embs0[b], embs1[b])
+    assert rt0.clock.now() == rt1.clock.now()
+
+
+# ---------------- recovery streaming + staged drops ----------------
+
+
+def test_recovery_streams_lost_rows_back():
+    gid = _ids(2048, seed=2)
+    store = ShardedTieredStore.build(_host(), ROWS, 2, "row", capacity=80,
+                                     policy="lru", warmup_batch=64)
+    store.arm_faults("kill:1@4,recover:1@6")
+    for b in range(16):
+        store.lookup(gid[b * 128: (b + 1) * 128])
+    ft = store.ft_stats
+    assert ft.kills == 1 and ft.recoveries == 1
+    assert ft.recovery_rows > 0 and ft.recovery_chunks >= 1
+    assert ft.recovery_bytes < ft.recovery_bytes_raw
+    assert store._recovery == {}                 # stream fully drained
+    assert store.stores[1].n_resident > 0        # replacement warmed back up
+    assert ft.down_us[1] > 0 and ft.down_us[0] == 0
+    ft.check()
+
+
+def test_kill_drops_staged_outputs_for_dead_shard():
+    store = ShardedTieredStore.build(_host(), ROWS, 2, "row", capacity=80,
+                                     warmup_batch=64)
+    store.arm_faults("kill:1@1")
+    store.lookup(_ids(128))     # batch 0: healthy
+    store.stores[1].stage_model_outputs(EMPTY, EMPTY,
+                                        np.array([0, 1, 2], np.int64))
+    store.lookup(_ids(128))     # batch 1: kill fires before the staged
+    #                             rows can land — work discarded, counted
+    assert store.ft_stats.staged_dropped == 3
+    store.ft_stats.check()
