@@ -143,32 +143,70 @@ def fig18_19_perf_model(ctx: BenchContext):
 
 
 def quantized_buffer_beyond_paper(ctx: BenchContext):
-    """Beyond-paper: int8 mixed-precision fast tier ([90] in the paper) —
-    same HBM byte budget holds ~3-4x the rows -> higher hit rate."""
+    """Beyond-paper: quantized fast tier (SDM's capacity/precision trade,
+    [90] in the paper) at a FIXED byte budget — a cell per paper-target
+    scenario served end-to-end through the harness twice, fp32 rows vs
+    int8 rows + per-row scales in the *same* bytes (the quantized arm
+    holds ~2.7x the rows at D=8).  Two gated rows:
+
+    * ``quantized_hit_rate_gain_at_fixed_bytes`` — worst-case quantized/
+      fp32 hit-rate ratio over the paper-target cells; a floor metric
+      with an absolute floor of 1.0 (the acceptance bar: quantization
+      must improve the hit rate on EVERY paper-target cell).
+    * ``quantized_dequant_max_abs_err`` — per-row dequantization error in
+      units of the acceptance bound ``max|row|/127``; a ceiling metric
+      with an absolute cap of 1.0 (round-half-even lands at ~0.5).
+    """
     import numpy as np
 
-    from repro.core.cache_sim import FALRU, simulate
-    from repro.core.tiered import TieredEmbeddingStore
+    from repro.core.tiered import TieredEmbeddingStore, fast_row_bytes
+    from repro.workloads import (PAPER_TARGET_SCENARIOS, replay_scenario,
+                                 scenario)
+    from repro.workloads.spec import make_trace
 
-    cfg, tr = _serving_cfg(ctx)
-    keys = tr.global_id
-    d = cfg.emb_dim
-    byte_budget = int(0.05 * tr.unique_count()) * 4 * d  # 5% fp32 buffer
-    cap_fp32 = byte_budget // (4 * d)
-    cap_int8 = byte_budget // (d + 4)
-    hr_fp32 = simulate(keys, FALRU(cap_fp32)).hit_rate
-    hr_int8 = simulate(keys, FALRU(cap_int8)).hit_rate
-    ctx.emit("beyond", "fp32_buffer_hit_rate", round(hr_fp32, 4),
-             f"capacity {cap_fp32} rows")
-    ctx.emit("beyond", "int8_buffer_hit_rate", round(hr_int8, 4),
-             f"capacity {cap_int8} rows (same bytes)")
-    # Numerical fidelity of the quantized tier.
-    host = np.random.default_rng(0).normal(size=(1000, d)).astype(np.float32)
+    n_acc = 16_384 if ctx.cfg.quick else 49_152
+    scale = dict(n_tables=8, rows_per_table=2048, n_accesses=n_acc, seed=0)
+    emb_dim = 8  # harness default; quantized row = 12 B vs 32 B fp32
+    gains, cap_ratios = [], []
+    for name in sorted(PAPER_TARGET_SCENARIOS):
+        spec = scenario(name, **scale)
+        # The budget a 12% fp32 buffer would spend — both arms get it.
+        budget = (int(0.12 * make_trace(spec).unique_count())
+                  * fast_row_bytes(emb_dim, np.float32, False))
+        res_f = replay_scenario(spec, policy="lru", batch=512,
+                                byte_budget=budget)
+        res_q = replay_scenario(spec, policy="lru", batch=512,
+                                byte_budget=budget, quantize=True)
+        gains.append(res_q["hit_rate"] / max(res_f["hit_rate"], 1e-9))
+        cap_ratios.append(res_q["capacity"] / max(res_f["capacity"], 1))
+        ctx.emit("beyond", f"{name}_fp32_hit_rate_at_fixed_bytes",
+                 round(res_f["hit_rate"], 4),
+                 f"{res_f['capacity']} rows in {budget} B, "
+                 f"p50 {res_f['p50_batch_ms']:.2f}ms")
+        ctx.emit("beyond", f"{name}_int8_hit_rate_at_fixed_bytes",
+                 round(res_q["hit_rate"], 4),
+                 f"{res_q['capacity']} rows (same bytes), "
+                 f"p50 {res_q['p50_batch_ms']:.2f}ms")
+    ctx.emit("beyond", "quantized_capacity_ratio_at_fixed_bytes",
+             round(min(cap_ratios), 3),
+             "acceptance: >= 2x resident rows at the same byte budget")
+    ctx.emit("beyond", "quantized_hit_rate_gain_at_fixed_bytes",
+             round(min(gains), 4),
+             f"worst over {sorted(PAPER_TARGET_SCENARIOS)}; perf-gate "
+             "floor (abs floor 1.0: must improve on every cell)")
+    # Numerical fidelity of the quantized tier, normalized per row by the
+    # acceptance bound max|row|/127 (so the gate is scale-free).
+    host = np.random.default_rng(0).normal(
+        size=(1000, emb_dim)).astype(np.float32)
     st = TieredEmbeddingStore(host, 64, quantize=True)
-    out = np.asarray(st.lookup(np.arange(32)))
-    err = float(np.abs(out - host[:32]).max() / np.abs(host).max())
-    ctx.emit("beyond", "int8_row_rel_err", round(err, 5),
-             "per-row scale quantization")
+    ids = np.arange(64)
+    out = np.asarray(st.lookup(ids))
+    amax = np.abs(host[ids]).max(axis=1)
+    err = np.abs(out - host[ids]).max(axis=1)
+    norm = float((err / (amax / 127.0 + 1e-9)).max())
+    ctx.emit("beyond", "quantized_dequant_max_abs_err", round(norm, 4),
+             "max per-row |dequant - host| / (max|row|/127); perf-gate "
+             "ceiling (abs cap 1.0)")
 
 
 def lookup_throughput(ctx: BenchContext):

@@ -48,6 +48,20 @@ deterministic on the VirtualClock):
   0.7* (graceful degradation means shedding and degraded answers absorb
   the excess — goodput must not collapse as load quadruples).
 
+Two guard the quantized fast tier (bench ``beyond``; counter-derived
+fixed-byte-budget cells plus a deterministic fidelity probe):
+
+* ``quantized_hit_rate_gain_at_fixed_bytes`` — worst-case quantized/fp32
+  hit-rate ratio over the paper-target scenarios at the same byte
+  budget; a floor metric with an *absolute floor of 1.0* (the acceptance
+  bar is directional — at fixed bytes the quantized tier must improve
+  the hit rate on every paper-target cell, so no tolerance may push the
+  floor below parity).
+* ``quantized_dequant_max_abs_err`` — max per-row dequantization error
+  in units of the acceptance bound ``max|row|/127``; a ceiling metric
+  with an *absolute cap of 1.0* (round-half-even sits at ~0.5; 1.0 is
+  the hard fidelity bar).
+
 One guards fault tolerance (bench ``failover``; counter-derived,
 deterministic on the VirtualClock):
 
@@ -144,6 +158,10 @@ def main(argv=None) -> int:
                 "overload_goodput_4x_vs_1x", floor=0.7)
     check_floor(("failover", "failover_goodput_kill_vs_clean"),
                 "failover_goodput_kill_vs_clean", floor=0.8)
+    check_floor(("beyond", "quantized_hit_rate_gain_at_fixed_bytes"),
+                "quantized_hit_rate_gain_at_fixed_bytes", floor=1.0)
+    check_ceiling(("beyond", "quantized_dequant_max_abs_err"),
+                  "quantized_dequant_max_abs_err", cap=1.0)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)}", file=sys.stderr)

@@ -23,7 +23,8 @@ from typing import List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiered import TierStats, TieredEmbeddingStore
+from repro.core.tiered import (TierStats, TieredEmbeddingStore,
+                               fast_row_bytes)
 
 
 class MultiTableTieredStore:
@@ -34,8 +35,10 @@ class MultiTableTieredStore:
     host_tables: per-table host-tier arrays, each (N_t, D).
     capacity:    total fast-tier rows across all tables (mutually exclusive
                  with ``byte_budget``).
-    byte_budget: total fast-tier bytes; converted to rows using the
-                 per-row footprint (D*4 for fp32, D+4 for the int8 tier).
+    byte_budget: total fast-tier bytes, split with *per-table* row
+                 footprints (``D * itemsize`` for full-precision rows —
+                 mixed-dtype table sets pay their own rate — or ``D + 4``
+                 for the quantized tier).
     weights:     optional per-table split weights (default: table rows).
     """
 
@@ -43,6 +46,7 @@ class MultiTableTieredStore:
                  capacity: Optional[int] = None,
                  byte_budget: Optional[int] = None,
                  policy: str = "lru", quantize: bool = False,
+                 row_format: Optional[str] = None,
                  weights: Optional[Sequence[float]] = None,
                  min_capacity: int = 4, fetch_us_fixed: float = 30.0,
                  **store_kw):
@@ -50,40 +54,50 @@ class MultiTableTieredStore:
             raise ValueError("pass exactly one of capacity / byte_budget")
         rows = np.array([t.shape[0] for t in host_tables], np.int64)
         d = host_tables[0].shape[1]
-        row_bytes = (d + 4) if quantize else d * host_tables[0].dtype.itemsize
-        if capacity is None:
-            capacity = int(byte_budget // row_bytes)
-        if capacity < len(host_tables):
+        # Budget split in the unit the caller budgeted in: bytes-per-row
+        # per table under ``byte_budget`` (tables can differ in dtype, so
+        # a shared scalar row size would over/under-run the budget), a
+        # unit cost of 1 under row ``capacity`` (same algorithm, rows).
+        rb = np.array([fast_row_bytes(t.shape[1], t.dtype, quantize,
+                                      row_format or "int8")
+                       for t in host_tables], np.int64)
+        unit = rb if capacity is None else np.ones(len(rb), np.int64)
+        budget = int(byte_budget) if capacity is None else int(capacity)
+        if int((np.minimum(1, rows) * unit).sum()) > budget:
             # Below one row per store the budget cannot be honored (stores
             # clamp to capacity >= 1); fail loudly instead of overrunning.
             raise ValueError(
-                f"budget of {capacity} rows cannot give {len(host_tables)} "
+                f"budget of {budget} cannot give {len(host_tables)} "
                 "tables one row each")
         w = np.asarray(weights if weights is not None else rows, np.float64)
         # The per-table floor must never be allowed to overrun the shared
         # budget: when the budget cannot afford ``min_capacity`` rows for
         # every table, the effective floor drops to an equal split (at
         # least one row — the irreducible store minimum).
-        floor = max(1, min(int(min_capacity), capacity // len(host_tables)))
-        caps = np.maximum(floor,
-                          np.floor(capacity * w / w.sum())).astype(np.int64)
+        floor = max(1, min(int(min_capacity), budget // int(unit.sum())))
+        caps = np.maximum(floor, np.floor(
+            budget * (w / w.sum()) / unit)).astype(np.int64)
         caps = np.minimum(caps, rows)  # never exceed the table itself
         # Lifting small tables to the floor can still overrun the budget;
-        # claw the excess back from the largest stores (down to the
-        # floor), largest-first — deterministic, and with the effective
-        # floor above this always converges to ``sum(caps) <= capacity``
-        # whenever ``capacity >= n_tables``.
-        excess = int(caps.sum() - capacity)
+        # claw the excess back from the biggest spender (in budget units)
+        # still above the floor, largest-first — deterministic, and since
+        # every table at the floor fits the budget by construction, this
+        # always converges to ``sum(caps * unit) <= budget``.
+        excess = int((caps * unit).sum()) - budget
         while excess > 0:
-            i = int(np.argmax(caps))
-            take = min(excess, int(caps[i]) - floor)
-            if take <= 0:
+            above = np.flatnonzero(caps > floor)
+            if not above.size:
                 break
+            i = int(above[np.argmax((caps * unit)[above])])
+            take = min(-(-excess // int(unit[i])), int(caps[i]) - floor)
             caps[i] -= take
-            excess -= take
+            excess -= take * int(unit[i])
         self.offsets = np.concatenate(([0], np.cumsum(rows)))
         self.capacity = int(caps.sum())
-        self.row_bytes = row_bytes
+        self.row_bytes_per_table = rb
+        self.row_bytes = int(rb.max())  # worst-case scalar (back-compat)
+        self.byte_budget = (int(byte_budget) if byte_budget is not None
+                            else int((caps * rb).sum()))
         # Sub-stores model only the per-row slow-tier cost; the fixed
         # per-batch overhead is charged once per *facade* batch with a miss
         # (matching the monolithic store's accounting, so the bench
@@ -92,6 +106,7 @@ class MultiTableTieredStore:
         self._fixed_fetch_s = 0.0
         self.stores: List[TieredEmbeddingStore] = [
             TieredEmbeddingStore(t, int(c), policy=policy, quantize=quantize,
+                                 row_format=row_format,
                                  fetch_us_fixed=0.0, **store_kw)
             for t, c in zip(host_tables, caps)
         ]

@@ -49,7 +49,8 @@ from typing import List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiered import TierStats, TieredEmbeddingStore
+from repro.core.tiered import (TierStats, TieredEmbeddingStore,
+                               fast_row_bytes)
 from repro.obs.tracing import get_tracer
 from repro.sharding.embedding_shard import (ShardPlan, make_plan,
                                             trace_frequencies)
@@ -70,6 +71,7 @@ class ShardedTieredStore:
 
     def __init__(self, host: np.ndarray, plan: ShardPlan,
                  policy: str = "lru", quantize: bool = False,
+                 row_format: Optional[str] = None,
                  fetch_us_fixed: float = 30.0, with_engines: bool = True,
                  fault_plan=None, fault_horizon: Optional[int] = None,
                  **store_kw):
@@ -84,6 +86,7 @@ class ShardedTieredStore:
         self._host = np.asarray(host)
         self._policy = policy
         self._quantize = quantize
+        self._row_format = row_format
         self._store_kw = dict(store_kw)
         # Per-shard stores model the per-row slow-tier cost; the fixed
         # per-batch overhead is charged at the facade (once per batch with
@@ -93,8 +96,8 @@ class ShardedTieredStore:
         self.fetch_us_fixed = float(fetch_us_fixed)
         self.stores: List[TieredEmbeddingStore] = [
             TieredEmbeddingStore(host[g], int(c), policy=policy,
-                                 quantize=quantize, fetch_us_fixed=0.0,
-                                 **store_kw)
+                                 quantize=quantize, row_format=row_format,
+                                 fetch_us_fixed=0.0, **store_kw)
             for g, c in zip(plan.global_ids, plan.capacities)
         ]
         self.out_dtype = (np.float32 if quantize
@@ -144,6 +147,7 @@ class ShardedTieredStore:
     def build(cls, host: np.ndarray, rows_per_table: Sequence[int],
               n_shards: int, placement: str = "table",
               capacity: Optional[int] = None,
+              byte_budget: Optional[int] = None,
               frequencies: Optional[np.ndarray] = None,
               fast_weights: Optional[Sequence[float]] = None,
               profile_ids: Optional[np.ndarray] = None,
@@ -151,9 +155,20 @@ class ShardedTieredStore:
               **kw) -> "ShardedTieredStore":
         """Plan + store in one call.  ``profile_ids`` (a trace sample)
         stands in for explicit ``frequencies`` under ``"freq"`` and for
-        ``replicate_hot`` (top-k hot rows resident on every shard)."""
+        ``replicate_hot`` (top-k hot rows resident on every shard).
+        ``byte_budget`` (mutually exclusive with ``capacity``) budgets the
+        total fast tier in bytes, converted with the quantization-aware
+        per-row footprint before the planner splits rows across shards."""
+        if capacity is not None and byte_budget is not None:
+            raise ValueError("pass at most one of capacity / byte_budget")
+        if byte_budget is not None:
+            rb = fast_row_bytes(host.shape[1], host.dtype,
+                                kw.get("quantize", False),
+                                kw.get("row_format") or "int8")
+            capacity = int(byte_budget) // rb
         if capacity is None:
-            raise ValueError("capacity (total fast-tier rows) is required")
+            raise ValueError("capacity (total fast-tier rows) or "
+                             "byte_budget is required")
         if frequencies is None and profile_ids is not None:
             frequencies = trace_frequencies(profile_ids, host.shape[0])
         plan = make_plan(rows_per_table, n_shards, int(capacity),
@@ -322,6 +337,7 @@ class ShardedTieredStore:
         new = TieredEmbeddingStore(self._host[g], int(old.capacity),
                                    policy=self._policy,
                                    quantize=self._quantize,
+                                   row_format=self._row_format,
                                    fetch_us_fixed=0.0, **kw)
         new.stats = old.stats
         self.stores[s] = new

@@ -77,6 +77,26 @@ from repro.core.buffer_manager import RecMGBuffer
 from repro.obs.tracing import get_tracer
 
 
+# Quantized fast-tier row formats: storage dtype per format (scale stays
+# fp32 either way).  Mirrors repro.kernels.embedding_gather.ROW_FORMATS —
+# kept local so the store's constructor-time validation doesn't import the
+# Pallas stack.
+_QDTYPE = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
+
+
+def fast_row_bytes(d: int, host_dtype, quantize: bool,
+                   row_format: str = "int8") -> int:
+    """Per-row fast-tier footprint in bytes: ``d * itemsize`` for fp32
+    rows, ``d * 1 + 4`` for the quantized formats (1-byte elements + one
+    fp32 scale) — the accounting the byte-budget facades split on."""
+    if quantize:
+        if row_format not in _QDTYPE:
+            raise ValueError(f"unknown row_format {row_format!r} "
+                             f"(expected one of {sorted(_QDTYPE)})")
+        return d + 4
+    return d * np.dtype(host_dtype).itemsize
+
+
 def _bucket(n: int) -> int:
     """Round up to a power of two (>= 16): the shape-bucketing that keeps
     the jitted scatter/gather from recompiling for every working-set size."""
@@ -110,20 +130,71 @@ _JIT_SCATTER = jax.jit(lambda buf, idx, rows: buf.at[idx].set(rows),
 _JIT_SCATTER_SC = jax.jit(lambda sc, idx, s: sc.at[idx].set(s),
                           donate_argnums=(0,))
 
-_KERNEL_JITS: Dict[str, object] = {}
+
+def _scatter_quant(buf, sc, idx, rows, row_format):
+    """Fused device-side quantize + scatter: per-row scale derivation,
+    round/clip and both buffer writes trace into ONE jitted program, so
+    the quantized admit keeps the fp32 path's single-dispatch /
+    one-sync-per-batch property (the old host NumPy quantizer serialized
+    a round-trip per admit)."""
+    from repro.kernels.embedding_gather import quantize_rows_ref
+
+    q, s = quantize_rows_ref(rows, row_format)
+    return buf.at[idx].set(q), sc.at[idx].set(s)
 
 
-def _kernel_gathers():
-    """Pallas row-gather variants, built lazily (TPU backend only)."""
-    if not _KERNEL_JITS:
-        from repro.kernels.embedding_gather import gather_rows
+_JIT_SCATTER_Q = jax.jit(_scatter_quant, static_argnums=(4,),
+                         donate_argnums=(0, 1))
 
-        _KERNEL_JITS["g"] = jax.jit(
-            lambda buf, iv: gather_rows(buf, iv[0])[iv[1]])
-        _KERNEL_JITS["gov"] = jax.jit(
-            lambda buf, iv, ov, hr:
-            jnp.where(ov[:, None], hr, gather_rows(buf, iv[0]))[iv[1]])
-    return _KERNEL_JITS["g"], _KERNEL_JITS["gov"]
+_KERNEL_JITS: Dict[tuple, object] = {}
+
+
+def _kernel_gathers(quantized: bool = False, interpret: bool = False):
+    """Pallas row-gather variants, built lazily (TPU backend, or any
+    backend under ``interpret=True``).  ``quantized=True`` returns the
+    fused dequantizing pair (int8/fp8 row + per-row scale DMA'd HBM->VMEM,
+    dequantized in-kernel) with the overflow where-select folded in."""
+    key = ("gq" if quantized else "g", interpret)
+    if key not in _KERNEL_JITS:
+        from repro.kernels import embedding_gather as eg
+
+        if quantized:
+            def g(buf, sc, iv, _i=interpret):
+                return eg.gather_rows_dequant(buf, sc, iv[0],
+                                              interpret=_i)[iv[1]]
+
+            def gov(buf, sc, iv, ov, hr, _i=interpret):
+                return jnp.where(
+                    ov[:, None], hr,
+                    eg.gather_rows_dequant(buf, sc, iv[0],
+                                           interpret=_i))[iv[1]]
+        else:
+            def g(buf, iv, _i=interpret):
+                return eg.gather_rows(buf, iv[0], interpret=_i)[iv[1]]
+
+            def gov(buf, iv, ov, hr, _i=interpret):
+                return jnp.where(ov[:, None], hr,
+                                 eg.gather_rows(buf, iv[0],
+                                                interpret=_i))[iv[1]]
+        _KERNEL_JITS[key] = (jax.jit(g), jax.jit(gov))
+    return _KERNEL_JITS[key]
+
+
+def _kernel_scatter_q(row_format: str, interpret: bool = False):
+    """Fused Pallas quantize + scatter for the kernel path: admitted fp32
+    rows are quantized by the :func:`~repro.kernels.embedding_gather.
+    quantize_rows` kernel and scattered into the quantized buffer + scale
+    vector inside one jitted program (single dispatch, donated buffers)."""
+    key = ("qs", row_format, interpret)
+    if key not in _KERNEL_JITS:
+        from repro.kernels import embedding_gather as eg
+
+        def qs(buf, sc, idx, rows, _rf=row_format, _i=interpret):
+            q, s = eg.quantize_rows(rows, row_format=_rf, interpret=_i)
+            return buf.at[idx].set(q), sc.at[idx].set(s)
+
+        _KERNEL_JITS[key] = jax.jit(qs, donate_argnums=(0, 1))
+    return _KERNEL_JITS[key]
 
 
 @dataclass
@@ -195,16 +266,26 @@ class TieredEmbeddingStore:
     def __init__(self, host_table: np.ndarray, capacity: int,
                  policy: str = "lru", eviction_speed: int = 4,
                  fetch_us_per_row: float = 10.0, fetch_us_fixed: float = 30.0,
-                 quantize: bool = False, use_kernel: Optional[bool] = None,
+                 quantize: bool = False, row_format: Optional[str] = None,
+                 use_kernel: Optional[bool] = None,
+                 kernel_interpret: bool = False,
                  warmup_batch: Optional[int] = None):
-        """``quantize=True``: int8 rows + per-row scale in the fast tier —
-        the mixed-precision-embedding trick the paper cites ([90]): ~4x the
-        resident rows per HBM byte, so at a fixed byte budget the buffer
-        holds 4x capacity and the hit rate rises (beyond-paper experiment in
-        benchmarks/bench_e2e.py).
+        """``quantize=True``: quantized rows + per-row fp32 scale in the
+        fast tier — the mixed-precision-embedding trick the paper cites
+        ([90]): ``D + 4`` bytes per resident row instead of ``D *
+        itemsize``, so at a fixed byte budget the buffer holds ~2-4x the
+        rows and the hit rate rises (gated fixed-byte-budget cells in
+        benchmarks/bench_e2e.py).  ``row_format`` picks the storage format
+        (``"int8"`` default, or ``"fp8"`` = float8_e4m3fn); passing it
+        without ``quantize=True`` is an error.
 
-        ``use_kernel``: route the device gather through the Pallas
-        row-gather kernel (default: auto, TPU backend only).
+        ``use_kernel``: route the device gather (and, under quantize, the
+        admit-side quantizer) through the fused Pallas kernels.  Default
+        auto: TPU backend with a lane-aligned D.  An *explicit*
+        ``use_kernel=True`` is validated, never silently downgraded: off
+        the TPU backend it needs ``kernel_interpret=True`` (the Pallas
+        interpreter — the CPU test lane), and D must be a multiple of 128
+        on the compiled path.
 
         ``warmup_batch``: eagerly compile the jitted scatter/gather for
         every power-of-two shape bucket a batch of up to this many ids can
@@ -213,8 +294,16 @@ class TieredEmbeddingStore:
         n, d = host_table.shape
         self.capacity = max(1, int(capacity))  # same clamp as RecMGBuffer
         self.quantize = quantize
+        if row_format is not None and not quantize:
+            raise ValueError("row_format requires quantize=True "
+                             "(fp32 rows have no storage format knob)")
+        self.row_format = row_format or "int8"
+        if self.row_format not in _QDTYPE:
+            raise ValueError(f"unknown row_format {self.row_format!r} "
+                             f"(expected one of {sorted(_QDTYPE)})")
         if quantize:
-            self.buffer = jnp.zeros((self.capacity, d), jnp.int8)
+            self.buffer = jnp.zeros((self.capacity, d),
+                                    _QDTYPE[self.row_format])
             self.scales = jnp.zeros((self.capacity,), jnp.float32)
         else:
             self.buffer = jnp.zeros((self.capacity, d), host_table.dtype)
@@ -238,18 +327,44 @@ class TieredEmbeddingStore:
         self.fetch_us_fixed = fetch_us_fixed
         self.stats = TierStats()
         self._staged: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self.kernel_interpret = bool(kernel_interpret)
+        on_tpu = jax.default_backend() == "tpu"
         if use_kernel is None:
-            use_kernel = jax.default_backend() == "tpu"
-        self.use_kernel = bool(use_kernel) and not quantize
-        if quantize:
+            # Auto mode may downgrade: the kernel path only engages when
+            # the backend can actually compile it for this table shape.
+            use_kernel = on_tpu and d % 128 == 0
+        elif use_kernel:
+            # An explicit request is a contract — validate, never
+            # silently drop (the old ``and not quantize`` downgrade hid
+            # exactly this class of misconfiguration).
+            if not on_tpu and not self.kernel_interpret:
+                raise ValueError(
+                    "use_kernel=True requires the TPU backend; pass "
+                    "kernel_interpret=True to run the Pallas kernels in "
+                    "interpret mode (the CPU test lane)")
+            if not self.kernel_interpret and d % 128:
+                raise ValueError(
+                    f"use_kernel=True requires D % 128 == 0 (got D={d}): "
+                    "the compiled kernels stream rows through the 128-lane "
+                    "layout — pad the table or pass kernel_interpret=True")
+        self.use_kernel = bool(use_kernel)
+        if self.use_kernel:
+            self._gather_inv, self._gather_ov = _kernel_gathers(
+                quantized=quantize, interpret=self.kernel_interpret)
+        elif quantize:
             self._gather_inv, self._gather_ov = _JIT_GATHER_Q, _JIT_GATHER_Q_OV
-            self._out_np_dtype = np.dtype(np.float32)
-        elif self.use_kernel:
-            self._gather_inv, self._gather_ov = _kernel_gathers()
-            self._out_np_dtype = np.dtype(self.buffer.dtype)
         else:
             self._gather_inv, self._gather_ov = _JIT_GATHER, _JIT_GATHER_OV
-            self._out_np_dtype = np.dtype(self.buffer.dtype)
+        self._out_np_dtype = np.dtype(
+            np.float32 if quantize else self.buffer.dtype)
+        if quantize:
+            if self.use_kernel:
+                self._scatter_q = _kernel_scatter_q(
+                    self.row_format, interpret=self.kernel_interpret)
+            else:
+                rf = self.row_format
+                self._scatter_q = lambda buf, sc, idx, rows: \
+                    _JIT_SCATTER_Q(buf, sc, idx, rows, rf)
         if warmup_batch:
             self.warmup(warmup_batch)
 
@@ -337,12 +452,16 @@ class TieredEmbeddingStore:
             # slot 0 with its own current row (a no-op write).
             slots = jnp.zeros(b, jnp.int32)
             if self.quantize:
-                q0 = np.repeat(np.asarray(self.buffer[0:1]), b, axis=0)
-                s0 = np.repeat(np.asarray(self.scales[0:1]), b)
-                self.buffer = _JIT_SCATTER(self.buffer, slots,
-                                           jnp.asarray(q0))
-                self.scales = _JIT_SCATTER_SC(self.scales, slots,
-                                              jnp.asarray(s0))
+                # Warm the fused quantize+scatter with slot 0's own
+                # dequantized row: re-quantizing a quantized row is
+                # value-preserving (same scale derivation, round-half-even
+                # maps each code back to itself), so resident contents
+                # survive to within the format's quantization error.
+                r0 = (np.asarray(self.buffer[0:1]).astype(np.float32)
+                      * float(np.asarray(self.scales[0])))
+                rows = jnp.asarray(np.repeat(r0, b, axis=0))
+                self.buffer, self.scales = self._scatter_q(
+                    self.buffer, self.scales, slots, rows)
             else:
                 r0 = np.repeat(np.asarray(self.buffer[0:1]), b, axis=0)
                 self.buffer = _JIT_SCATTER(self.buffer, slots,
@@ -644,13 +763,13 @@ class TieredEmbeddingStore:
             slots = np.concatenate((slots, np.repeat(slots[-1:], pad)))
             rows = np.concatenate((rows, np.repeat(rows[-1:], pad, axis=0)))
         if self.quantize:
-            scale = np.abs(rows).max(axis=1) / 127.0 + 1e-12
-            q = np.clip(np.round(rows / scale[:, None]), -127, 127)
-            self.buffer = _JIT_SCATTER(
-                self.buffer, jnp.asarray(slots), jnp.asarray(q, jnp.int8))
-            self.scales = _JIT_SCATTER_SC(
-                self.scales, jnp.asarray(slots),
-                jnp.asarray(scale, jnp.float32))
+            # Device-side quantize + scatter in one fused dispatch (Pallas
+            # quantizer on the kernel path, jnp reference otherwise): no
+            # host NumPy pass, and the write pipelines into the batch's
+            # gather exactly like the fp32 scatter does.
+            self.buffer, self.scales = self._scatter_q(
+                self.buffer, self.scales, jnp.asarray(slots),
+                jnp.asarray(rows, jnp.float32))
         else:
             self.buffer = _JIT_SCATTER(
                 self.buffer, jnp.asarray(slots), jnp.asarray(rows))

@@ -1,4 +1,4 @@
-"""Fused embedding gather + sum-pool Pallas TPU kernel.
+"""Fused embedding gather + sum-pool Pallas TPU kernels, fp32 and quantized.
 
 This is the paper's hot spot: multi-hot lookups into large embedding tables
 (TorchRec's fused kernels on GPU).  TPU-native formulation: the multi-hot
@@ -10,14 +10,43 @@ layout) and accumulates the pool sum in the revisited output block.
 Grid: (batch, pooling) with the pooling axis innermost — the output block
 (1, D) stays resident in VMEM across the whole pooling loop and is written
 back once (TPU grids are sequential, revisited blocks are kept live).
+
+The ``*_dequant`` variants serve the quantized fast tier (SDM's
+capacity/precision trade): the table holds int8 or fp8 rows with one fp32
+scale per row, and dequantization happens *in kernel* — each grid step DMAs
+the 1-byte-per-element row plus its (1, 1) scale and multiplies in VMEM, so
+the HBM traffic per gathered row is ``D + 4`` bytes instead of ``4 * D``.
+``quantize_rows`` is the matching populate-side kernel: per-row absmax ->
+scale -> round/clip device-side, so admits never round-trip through host
+NumPy.  Row formats (``ROW_FORMATS``): ``int8`` (symmetric, +-127) and
+``fp8`` (``float8_e4m3fn``, +-448).
 """
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# row format -> (storage dtype, largest representable magnitude the scale
+# normalizes to).  Shared by the kernels, the jnp reference, and the store.
+ROW_FORMATS = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+
+
+def _check_lane_width(d: int, interpret: bool, fn: str):
+    """The compiled TPU path streams rows through the 128-lane VREG
+    layout; a ragged last lane-group silently corrupts the DMA tiling, so
+    fail loudly instead (the interpret path has no such constraint)."""
+    if not interpret and d % 128:
+        raise ValueError(
+            f"{fn}: embedding dim D={d} must be a multiple of 128 (TPU "
+            "lane width) on the compiled path — pad the table to a "
+            "multiple of 128 or pass interpret=True")
 
 
 def _gather_pool_kernel(idx_ref, table_ref, out_ref):
@@ -41,11 +70,12 @@ def gather_rows(table: jax.Array, idx: jax.Array, *,
     The un-pooled gather the tiered serving buffer uses: the flat slot-index
     vector is scalar-prefetched so ``BlockSpec.index_map`` DMAs exactly the
     needed buffer row HBM->VMEM per grid step (same streaming layout as
-    ``gather_pool``, minus the accumulation).  D should be a multiple of 128
-    (lane width) for the non-interpret path.
+    ``gather_pool``, minus the accumulation).  D must be a multiple of 128
+    (lane width) for the non-interpret path (checked).
     """
     (M,) = idx.shape
     N, D = table.shape
+    _check_lane_width(D, interpret, "gather_rows")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(M,),
@@ -66,10 +96,12 @@ def gather_pool(table: jax.Array, idx: jax.Array, *,
                 interpret: bool = False) -> jax.Array:
     """table: (N, D); idx: (B, P) int32 -> pooled (B, D) = sum_p table[idx].
 
-    D should be a multiple of 128 (lane width) for the non-interpret path.
+    D must be a multiple of 128 (lane width) for the non-interpret path
+    (checked).
     """
     B, P = idx.shape
     N, D = table.shape
+    _check_lane_width(D, interpret, "gather_pool")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, P),
@@ -84,3 +116,146 @@ def gather_pool(table: jax.Array, idx: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
         interpret=interpret,
     )(idx.astype(jnp.int32), table)
+
+
+# ---------------------------------------------------------------------------
+# Quantized fast tier: fused dequantizing gathers + device-side quantizer.
+# ---------------------------------------------------------------------------
+
+
+def _gather_rows_dequant_kernel(idx_ref, table_ref, scale_ref, out_ref):
+    out_ref[...] = table_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+
+
+def gather_rows_dequant(table: jax.Array, scales: jax.Array, idx: jax.Array,
+                        *, interpret: bool = False) -> jax.Array:
+    """table: (N, D) int8/fp8; scales: (N,) fp32; idx: (M,) ->
+    (M, D) fp32 = table[idx] * scales[idx, None], dequantized in-kernel.
+
+    Same streaming layout as :func:`gather_rows`: the scalar-prefetched
+    index vector drives both block index maps, so each grid step DMAs one
+    quantized row (D bytes) plus its (1, 1) scale and dequantizes in VMEM
+    — the fp32 row never exists in HBM.  D must be a multiple of 128 on
+    the non-interpret path (checked).
+    """
+    (M,) = idx.shape
+    N, D = table.shape
+    _check_lane_width(D, interpret, "gather_rows_dequant")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda m, idx_ref: (idx_ref[m], 0)),
+            pl.BlockSpec((1, 1), lambda m, idx_ref: (idx_ref[m], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda m, idx_ref: (m, 0)),
+    )
+    return pl.pallas_call(
+        _gather_rows_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table, scales.reshape(-1, 1))
+
+
+def _gather_pool_dequant_kernel(idx_ref, table_ref, scale_ref, out_ref):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...].astype(jnp.float32) * scale_ref[0, 0]
+
+
+def gather_pool_dequant(table: jax.Array, scales: jax.Array, idx: jax.Array,
+                        *, interpret: bool = False) -> jax.Array:
+    """table: (N, D) int8/fp8; scales: (N,); idx: (B, P) ->
+    (B, D) fp32 = sum_p table[idx] * scales[idx], dequantized in-kernel.
+
+    The pooled variant accumulates *dequantized* rows in the revisited
+    VMEM output block, so pooling never materialises per-hot fp32 rows.
+    D must be a multiple of 128 on the non-interpret path (checked).
+    """
+    B, P = idx.shape
+    N, D = table.shape
+    _check_lane_width(D, interpret, "gather_pool_dequant")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, p, idx_ref: (idx_ref[b, p], 0)),
+            pl.BlockSpec((1, 1), lambda b, p, idx_ref: (idx_ref[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, p, idx_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _gather_pool_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), table, scales.reshape(-1, 1))
+
+
+def _quantize_rows_kernel(rows_ref, q_ref, scale_ref, *, row_format):
+    qdtype, qmax = ROW_FORMATS[row_format]
+    row = rows_ref[...].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(row)) / qmax + 1e-12
+    y = row / scale
+    if row_format == "int8":
+        # jnp.round is round-half-even, bit-identical to np.round — the
+        # fidelity suite pins host/device quantizer parity on that.
+        y = jnp.clip(jnp.round(y), -qmax, qmax)
+    q_ref[...] = y.astype(qdtype)
+    scale_ref[0, 0] = scale
+
+
+def quantize_rows(rows: jax.Array, *, row_format: str = "int8",
+                  interpret: bool = False):
+    """rows: (M, D) float -> ((M, D) quantized, (M,) fp32 per-row scales).
+
+    The populate-side kernel: one grid step per admitted row computes the
+    per-row absmax, derives ``scale = absmax / qmax + 1e-12`` and
+    round/clips (int8) or narrows (fp8) in VMEM — the device-side twin of
+    the host NumPy quantizer the store used to run per admit.  D must be
+    a multiple of 128 on the non-interpret path (checked).
+    """
+    if row_format not in ROW_FORMATS:
+        raise ValueError(f"unknown row_format {row_format!r} "
+                         f"(expected one of {sorted(ROW_FORMATS)})")
+    M, D = rows.shape
+    _check_lane_width(D, interpret, "quantize_rows")
+    qdtype, _ = ROW_FORMATS[row_format]
+    q, scales = pl.pallas_call(
+        functools.partial(_quantize_rows_kernel, row_format=row_format),
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, D), lambda m: (m, 0))],
+        out_specs=[pl.BlockSpec((1, D), lambda m: (m, 0)),
+                   pl.BlockSpec((1, 1), lambda m: (m, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, D), qdtype),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(rows.astype(jnp.float32))
+    return q, scales.reshape(-1)
+
+
+def quantize_rows_ref(rows: jax.Array, row_format: str = "int8"):
+    """jnp reference for :func:`quantize_rows` (also the store's default
+    device-side quantizer off the kernel path) — same scale derivation,
+    same round-half-even, so host NumPy / jnp / Pallas agree bit-for-bit
+    on fp32 inputs."""
+    if row_format not in ROW_FORMATS:
+        raise ValueError(f"unknown row_format {row_format!r} "
+                         f"(expected one of {sorted(ROW_FORMATS)})")
+    qdtype, qmax = ROW_FORMATS[row_format]
+    rows = rows.astype(jnp.float32)
+    scales = jnp.max(jnp.abs(rows), axis=1) / qmax + 1e-12
+    y = rows / scales[:, None]
+    if row_format == "int8":
+        y = jnp.clip(jnp.round(y), -qmax, qmax)
+    return y.astype(qdtype), scales
+
+
+def dequantize_rows_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Dequantization oracle: (M, D) quantized + (M,) scales -> (M, D) fp32."""
+    return q.astype(jnp.float32) * scales[:, None]

@@ -41,8 +41,16 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
                 adapt_cfg=None, model=None, overload: float = 0.0,
                 priority_mix=None, queue_bound: int = 0,
                 fault_plan: str = "", fault_seed: int = 0,
-                replicate_hot: int = 0, log=None) -> Dict:
+                replicate_hot: int = 0, quantize: bool = False,
+                row_format: Optional[str] = None, log=None) -> Dict:
     """Replay a trace as DLRM inference batches through the tiered store.
+
+    ``quantize=True`` stores the fast tier quantized (``row_format``:
+    ``"int8"`` default or ``"fp8"``) with per-row fp32 scales — ``D + 4``
+    bytes per resident row instead of ``D * 4``, so the same byte budget
+    holds more hot rows (``capacity`` here is still in rows; the CLI's
+    ``--quantize`` converts the byte budget implied by
+    ``--capacity-frac`` into the larger quantized row count).
 
     ``multi_table=True`` serves through the per-table facade (one batched
     store per sparse feature under the shared row budget) instead of one
@@ -122,6 +130,7 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
             host, trace.rows_per_table, shards, placement,
             capacity=capacity, policy=pol, profile_ids=profile,
             replicate_hot=int(replicate_hot),
+            quantize=quantize, row_format=row_format,
             fetch_us_per_row=fetch_us_per_row, warmup_batch=per_batch)
         if fault_plan:
             store.arm_faults(
@@ -130,10 +139,12 @@ def serve_trace(cfg, params, trace: Trace, capacity: int, policy: str,
     elif multi_table:
         store = MultiTableTieredStore.from_global_table(
             host, trace.rows_per_table, capacity=capacity, policy=pol,
+            quantize=quantize, row_format=row_format,
             fetch_us_per_row=fetch_us_per_row, warmup_batch=per_batch)
     else:
         store = TieredEmbeddingStore(
-            host, capacity, policy=pol, fetch_us_per_row=fetch_us_per_row,
+            host, capacity, policy=pol, quantize=quantize,
+            row_format=row_format, fetch_us_per_row=fetch_us_per_row,
             warmup_batch=per_batch)
     fwd = jax.jit(lambda pr, d, e: _dense_forward(pr, cfg, d, e))
 
@@ -411,6 +422,14 @@ def main(argv=None):
     ap.add_argument("--capacity-frac", type=float, default=0.2)
     ap.add_argument("--accesses", type=int, default=200_000)
     ap.add_argument("--train-epochs", type=int, default=3)
+    ap.add_argument("--quantize", action="store_true",
+                    help="store the fast tier quantized (per-row scales); "
+                         "the byte budget implied by --capacity-frac is "
+                         "re-spent as quantized rows, so the buffer holds "
+                         "~2-4x the rows at the same bytes")
+    ap.add_argument("--row-format", default="int8",
+                    choices=("int8", "fp8"),
+                    help="quantized row storage format (with --quantize)")
     ap.add_argument("--multi-table", action="store_true",
                     help="serve through the per-table facade "
                          "(one batched store per sparse feature)")
@@ -509,6 +528,17 @@ def main(argv=None):
         )
         trace = generate_trace(tr_cfg)
     capacity = int(args.capacity_frac * trace.unique_count())
+    if args.quantize:
+        # Hold the byte budget fixed: re-spend the fp32 budget implied by
+        # --capacity-frac as quantized rows (D + 4 bytes each).
+        from repro.core.tiered import fast_row_bytes
+
+        fp32_bytes = capacity * fast_row_bytes(cfg.emb_dim, np.float32,
+                                               False)
+        capacity = fp32_bytes // fast_row_bytes(cfg.emb_dim, np.float32,
+                                                True, args.row_format)
+        print(f"quantize({args.row_format}): {fp32_bytes} fast-tier bytes "
+              f"-> {capacity} resident rows")
 
     outputs = None
     model_rt = None
@@ -571,7 +601,10 @@ def main(argv=None):
                           queue_bound=args.queue_bound,
                           fault_plan=args.fault_plan,
                           fault_seed=args.fault_seed,
-                          replicate_hot=args.replicate_hot, log=print)
+                          replicate_hot=args.replicate_hot,
+                          quantize=args.quantize,
+                          row_format=args.row_format if args.quantize
+                          else None, log=print)
     finally:
         if tracer is not None:
             install_tracer(None)

@@ -44,6 +44,7 @@ GOLDEN_KEYS = ("regime", "policy", "batches", "lookups", "hits", "hit_rate",
 def build_store(host: np.ndarray, rows_per_table: np.ndarray, capacity: int,
                 policy: str, shards: int = 0, placement: str = "table",
                 fetch_us_per_row: float = 10.0,
+                quantize: bool = False, row_format: Optional[str] = None,
                 warmup_batch: Optional[int] = None):
     """The same store-selection switch ``serve_trace`` uses (shards=0 ->
     single worker)."""
@@ -52,10 +53,11 @@ def build_store(host: np.ndarray, rows_per_table: np.ndarray, capacity: int,
 
         return ShardedTieredStore.build(
             host, rows_per_table, shards, placement, capacity=capacity,
-            policy=policy, fetch_us_per_row=fetch_us_per_row,
-            warmup_batch=warmup_batch)
+            policy=policy, quantize=quantize, row_format=row_format,
+            fetch_us_per_row=fetch_us_per_row, warmup_batch=warmup_batch)
     return TieredEmbeddingStore(
-        host, capacity, policy=policy, fetch_us_per_row=fetch_us_per_row,
+        host, capacity, policy=policy, quantize=quantize,
+        row_format=row_format, fetch_us_per_row=fetch_us_per_row,
         warmup_batch=warmup_batch)
 
 
@@ -66,6 +68,9 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
                     adapt_cfg: Optional[DriftConfig] = None,
                     profile_frac: float = 1.0, emb_dim: int = 8,
                     capacity: Optional[int] = None,
+                    byte_budget: Optional[int] = None,
+                    quantize: bool = False,
+                    row_format: Optional[str] = None,
                     in_len: int = 15, out_len: int = 5,
                     model: str = "frequency", model_cfg=None) -> Dict:
     """Serve one scenario end to end; returns the metrics dict.
@@ -81,17 +86,32 @@ def replay_scenario(spec: WorkloadSpec, policy: str = "lru",
     ``model="learned"`` the controller additionally fine-tunes the model
     online on every drift refresh
     (:class:`~repro.core.model_runtime.LearnedController`).
+
+    ``byte_budget`` sizes the fast tier in bytes instead of rows
+    (mutually exclusive with ``capacity``), converted with the
+    quantization-aware per-row footprint — the fixed-byte-budget cells
+    (``quantize=True`` holds more rows in the same bytes) compare arms
+    through this knob.
     """
     if model not in ("frequency", "learned", "voyager"):
         raise ValueError(f"unknown model {model!r} "
                          "(frequency | learned | voyager)")
+    if capacity is not None and byte_budget is not None:
+        raise ValueError("pass at most one of capacity / byte_budget")
     trace = make_trace(spec)
-    cap = int(capacity) if capacity else max(
-        4, int(capacity_frac * trace.unique_count()))
+    if byte_budget is not None:
+        from repro.core.tiered import fast_row_bytes
+
+        cap = max(1, int(byte_budget) // fast_row_bytes(
+            emb_dim, np.float32, quantize, row_format or "int8"))
+    else:
+        cap = int(capacity) if capacity else max(
+            4, int(capacity_frac * trace.unique_count()))
     host = np.random.default_rng(0).normal(
         size=(trace.n_vectors, emb_dim)).astype(np.float32)
     store = build_store(host, trace.rows_per_table, cap, policy,
                         shards=shards, placement=placement,
+                        quantize=quantize, row_format=row_format,
                         warmup_batch=batch)
     upto = int(profile_frac * len(trace)) if profile_frac < 1.0 else None
     outputs = None

@@ -7,7 +7,13 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.chamfer_kernel import chamfer
-from repro.kernels.embedding_gather import gather_pool, gather_rows
+from repro.kernels.embedding_gather import (dequantize_rows_ref,
+                                            gather_pool,
+                                            gather_pool_dequant,
+                                            gather_rows,
+                                            gather_rows_dequant,
+                                            quantize_rows,
+                                            quantize_rows_ref)
 from repro.kernels.flash_attention import flash_attention
 
 
@@ -43,6 +49,59 @@ def test_gather_rows(N, D, M, dtype):
     out = gather_rows(table, idx, interpret=True)
     assert out.dtype == table.dtype
     np.testing.assert_array_equal(np.asarray(out), np.asarray(table[idx]))
+
+
+@pytest.mark.parametrize("N,D,M", [
+    (256, 128, 16),
+    (64, 256, 33),
+])
+@pytest.mark.parametrize("row_format", ["int8", "fp8"])
+def test_gather_rows_dequant(N, D, M, row_format):
+    """Fused dequantizing gather == gather-then-dequantize oracle, bit
+    for bit (both multiply the same codes by the same fp32 scales)."""
+    rows = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32)
+    q, s = quantize_rows_ref(rows, row_format)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (M,), 0, N)
+    idx = idx.at[0].set(idx[-1])  # force a duplicate
+    out = gather_rows_dequant(q, s, idx, interpret=True)
+    assert out.dtype == jnp.float32
+    want = dequantize_rows_ref(q, s)[idx]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("N,D,B,P", [
+    (256, 128, 8, 4),
+    (100, 128, 16, 7),
+])
+@pytest.mark.parametrize("row_format", ["int8", "fp8"])
+def test_gather_pool_dequant(N, D, B, P, row_format):
+    rows = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32)
+    q, s = quantize_rows_ref(rows, row_format)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, N)
+    out = gather_pool_dequant(q, s, idx, interpret=True)
+    want = dequantize_rows_ref(q, s)[idx].sum(axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_lane_width_validated_on_compiled_path():
+    """D % 128 != 0 must fail loudly on the non-interpret path (the docs
+    promised the constraint; now it's checked) and still run under
+    interpret mode."""
+    table = jnp.zeros((16, 96), jnp.float32)
+    idx = jnp.zeros((4,), jnp.int32)
+    pooled_idx = jnp.zeros((4, 2), jnp.int32)
+    q, s = quantize_rows_ref(table, "int8")
+    for call in (lambda: gather_rows(table, idx),
+                 lambda: gather_pool(table, pooled_idx),
+                 lambda: gather_rows_dequant(q, s, idx),
+                 lambda: gather_pool_dequant(q, s, pooled_idx),
+                 lambda: quantize_rows(table)):
+        with pytest.raises(ValueError, match="multiple of 128"):
+            call()
+    # interpret mode has no lane constraint
+    out = gather_rows(table, idx, interpret=True)
+    assert out.shape == (4, 96)
 
 
 @pytest.mark.parametrize("B,P,W,F,block", [

@@ -133,6 +133,49 @@ def test_access_chunk_matches_per_access():
     assert set(bulk.score) == set(ref.priority)
 
 
+def test_byte_budget_mixed_dtype_tables():
+    """Regression: the byte->row conversion used table 0's itemsize for
+    every table, so an fp32 + fp16 mix overran (or under-used) the shared
+    budget.  The split now charges each table its own row footprint."""
+    rng = np.random.default_rng(3)
+    d = 8
+    tables = [rng.normal(size=(100, d)).astype(np.float32),
+              rng.normal(size=(100, d)).astype(np.float16)]
+    byte_budget = 60 * d * 4  # 60 fp32 rows, or 120 fp16 rows
+    ms = MultiTableTieredStore(tables, byte_budget=byte_budget)
+    spent = sum(int(s.capacity) * int(rb)
+                for s, rb in zip(ms.stores, ms.row_bytes_per_table))
+    assert spent <= byte_budget
+    assert list(ms.row_bytes_per_table) == [d * 4, d * 2]
+    # The fp16 table's rows cost half as much, so the same weight buys it
+    # more resident rows — the old shared-scalar conversion couldn't.
+    assert ms.stores[1].capacity > ms.stores[0].capacity
+    # With table-0's itemsize charged uniformly (the old bug) this mix
+    # would have been priced at 32 B/row; the correct per-table spend
+    # fits strictly more rows into the same bytes.
+    assert ms.capacity > byte_budget // (d * 4)
+    ids = np.concatenate((np.arange(8), 100 + np.arange(8)))
+    out = np.asarray(ms.lookup(ids))
+    assert out.shape == (16, d)
+
+
+def test_byte_budget_quantized_holds_2x_rows():
+    """At the same byte budget the quantized facade must hold >= 2x the
+    resident rows (d=8: 32 B fp32 vs 12 B int8+scale)."""
+    rng = np.random.default_rng(4)
+    d = 8
+    tables = [rng.normal(size=(200, d)).astype(np.float32)
+              for _ in range(3)]
+    byte_budget = 50 * d * 4
+    fp32 = MultiTableTieredStore(tables, byte_budget=byte_budget)
+    q = MultiTableTieredStore(tables, byte_budget=byte_budget,
+                              quantize=True)
+    assert q.capacity >= 2 * fp32.capacity
+    spent = sum(int(s.capacity) * int(rb)
+                for s, rb in zip(q.stores, q.row_bytes_per_table))
+    assert spent <= byte_budget
+
+
 def test_byte_budget_hard_with_many_tiny_tables():
     """Regression (min-capacity edge): lifting many tiny tables to
     ``min_capacity`` must never overrun the shared byte budget — the

@@ -100,6 +100,27 @@ def test_trace_frequencies_profile_prefix():
 # ---------------- sharded store ----------------
 
 
+def test_build_byte_budget_quantized():
+    """``byte_budget`` sizes the sharded fast tier in bytes with the
+    quantization-aware row footprint: the quantized build holds >= 2x
+    the rows of the fp32 build at the same bytes (d=8: 32 B vs 12 B)."""
+    host = _host()
+    budget = 60 * 8 * 4
+    fp32 = ShardedTieredStore.build(host, ROWS, 2, capacity=None,
+                                    byte_budget=budget,
+                                    with_engines=False)
+    q = ShardedTieredStore.build(host, ROWS, 2, byte_budget=budget,
+                                 quantize=True, with_engines=False)
+    cap = lambda st: sum(s.capacity for s in st.stores)
+    assert cap(fp32) == budget // 32
+    assert cap(q) >= 2 * cap(fp32)
+    with pytest.raises(ValueError, match="at most one"):
+        ShardedTieredStore.build(host, ROWS, 2, capacity=10,
+                                 byte_budget=budget)
+    out = np.asarray(q.lookup(_ids(64)))
+    assert out.shape == (64, 8) and out.dtype == np.float32
+
+
 def test_store_plan_shape_mismatch_raises():
     plan = make_plan(ROWS, 2, 64, "table")
     with pytest.raises(ValueError, match="plan covers"):

@@ -108,6 +108,42 @@ def test_quantized_store_roundtrip(host):
     assert np.abs(out2 - host[[0]]).max() / np.abs(host).max() < 0.02
 
 
+def test_use_kernel_with_quantize_honored(host):
+    """Regression: the constructor used to silently drop an explicit
+    ``use_kernel=True`` whenever ``quantize=True`` (``bool(use_kernel)
+    and not quantize``).  The combination now routes through the fused
+    dequantizing kernel path."""
+    st = TieredEmbeddingStore(host, capacity=16, quantize=True,
+                              use_kernel=True, kernel_interpret=True)
+    assert st.use_kernel  # honored, not downgraded
+    ids = np.array([0, 5, 9, 5])
+    out = np.asarray(st.lookup(ids))
+    assert np.abs(out - host[ids]).max() / np.abs(host).max() < 0.02
+
+
+def test_use_kernel_unsupported_combos_raise(host):
+    """An explicit ``use_kernel=True`` is a contract: unsupported setups
+    raise instead of silently downgrading (auto mode may still fall
+    back)."""
+    import jax
+    if jax.default_backend() != "tpu":
+        # Explicit kernel request off-TPU needs the interpret escape hatch.
+        with pytest.raises(ValueError, match="TPU backend"):
+            TieredEmbeddingStore(host, capacity=16, use_kernel=True)
+        with pytest.raises(ValueError, match="TPU backend"):
+            TieredEmbeddingStore(host, capacity=16, quantize=True,
+                                 use_kernel=True)
+    # row_format is a quantized-tier knob.
+    with pytest.raises(ValueError, match="requires quantize=True"):
+        TieredEmbeddingStore(host, capacity=16, row_format="fp8")
+    with pytest.raises(ValueError, match="unknown row_format"):
+        TieredEmbeddingStore(host, capacity=16, quantize=True,
+                             row_format="int4")
+    # Auto mode still silently picks the portable path.
+    st = TieredEmbeddingStore(host, capacity=16, quantize=True)
+    assert isinstance(st.use_kernel, bool)
+
+
 def test_tierstats_merge_additive():
     """TierStats.merge: counter additivity and the merged hit rate."""
     from repro.core.tiered import TierStats
